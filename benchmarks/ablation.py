@@ -1,0 +1,39 @@
+"""Paper Table III: contribution of buffering and refinement (K=16)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, timed
+from repro.core.cuttana import partition as cuttana
+from repro.graph import edge_cut
+from repro.graph.generators import load_dataset
+
+VARIANTS = {
+    "full": dict(),
+    "no_refine": dict(use_refinement=False),
+    "no_buffer": dict(use_buffer=False),
+    "fennel(no_both)": dict(use_refinement=False, use_buffer=False),
+}
+
+
+def run(k: int = 16, datasets=("social-s", "web-s"), seed: int = 0):
+    rows = []
+    for ds in datasets:
+        graph = load_dataset(ds, seed=seed)
+        base = None
+        for name, kwargs in VARIANTS.items():
+            part, us = timed(
+                cuttana, graph, k, balance_mode="edge", order="random",
+                seed=seed, **kwargs,
+            )
+            ec = edge_cut(graph, part)
+            if name == "fennel(no_both)":
+                base = ec
+            rows.append(dict(dataset=ds, variant=name, edge_cut=ec))
+            emit(f"ablation/{ds}/{name}", us, f"edge_cut={ec:.4f}")
+        for r in rows:
+            if r["dataset"] == ds and base:
+                r["improvement_vs_fennel"] = 1 - r["edge_cut"] / base
+    return rows
+
+
+if __name__ == "__main__":
+    run()

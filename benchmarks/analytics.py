@@ -1,0 +1,76 @@
+"""Paper Table IV: distributed analytics latency (PageRank 30 iters, CC,
+SSSP) under each partitioner.
+
+Two measurements:
+  * the cluster cost model (v5e-pod constants) for every partitioner
+    including the vertex-cut edge partitioners (HDRF/Ginger), and
+  * a real run of the JAX engine (simulated-device mode) for the vertex
+    partitioners, reporting measured halo traffic.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, timed
+from repro.analytics import (
+    GraphEngine,
+    localize,
+    pagerank_program,
+    cc_program,
+    sssp_program,
+    workload_cost,
+)
+from repro.core import get_edge_partitioner, get_partitioner
+from repro.graph.generators import load_dataset
+
+WORKLOADS = {"pagerank": 30, "cc": 20, "sssp": 20}
+VERTEX_PARTITIONERS = ["cuttana", "fennel", "ldg", "heistream"]
+EDGE_PARTITIONERS = ["hdrf", "ginger"]
+
+
+def run(k: int = 8, datasets=("social-s", "web-s"), seed: int = 0,
+        engine_run: bool = True):
+    rows = []
+    for ds in datasets:
+        graph = load_dataset(ds, seed=seed)
+        assignments = {}
+        for name in VERTEX_PARTITIONERS:
+            assignments[name] = get_partitioner(name)(
+                graph, k, balance_mode="edge", order="random", seed=seed
+            )
+        for name in EDGE_PARTITIONERS:
+            assignments[name] = get_edge_partitioner(name)(graph, k, seed=seed)
+        for wl, iters in WORKLOADS.items():
+            for name, assignment in assignments.items():
+                cost = workload_cost(graph, assignment, k, iters)
+                rows.append(dict(dataset=ds, workload=wl, algo=name, **cost))
+                emit(
+                    f"analytics_model/{ds}/{wl}/{name}",
+                    cost["total_s"] * 1e6,
+                    f"straggler={cost['straggler_ratio']:.2f};"
+                    f"netB/iter={cost['network_bytes_per_iter']:.2e}",
+                )
+        if engine_run:
+            programs = {
+                "pagerank": pagerank_program(),
+                "cc": cc_program(),
+                "sssp": sssp_program(),
+            }
+            for name in ("cuttana", "fennel"):
+                lg = localize(graph, assignments[name], k)
+                eng = GraphEngine(lg, programs["pagerank"])
+                _, us = timed(eng.run_simulated, 10)
+                st = eng.stats(10)
+                emit(
+                    f"analytics_engine/{ds}/pagerank10/{name}",
+                    us,
+                    f"halo_msgs/iter={st.true_halo_messages_per_iter};"
+                    f"max_edges={st.max_local_edges}",
+                )
+                rows.append(dict(dataset=ds, workload="pagerank10-engine",
+                                 algo=name,
+                                 halo=st.true_halo_messages_per_iter,
+                                 max_edges=st.max_local_edges))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,17 @@
+"""Shared benchmark helpers: timing + CSV emission."""
+from __future__ import annotations
+
+import time
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timed(fn, *args, repeats: int = 1, **kwargs):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args, **kwargs)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6  # microseconds

@@ -1,0 +1,29 @@
+"""Paper Fig. 7: edge imbalance of vertex-balanced partitioners (the
+straggler problem CUTTANA's edge-balance mode fixes)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, timed
+from repro.core import get_partitioner
+from repro.graph import edge_imbalance
+from repro.graph.generators import load_dataset
+
+
+def run(k: int = 8, datasets=("social-s", "ldbc-s", "web-s"), seed: int = 0):
+    rows = []
+    for ds in datasets:
+        graph = load_dataset(ds, seed=seed)
+        for name in ("fennel", "ldg", "heistream", "cuttana"):
+            for balance in ("vertex", "edge"):
+                part, us = timed(
+                    get_partitioner(name), graph, k,
+                    epsilon=0.05, balance_mode=balance, order="random", seed=seed,
+                )
+                imb = edge_imbalance(graph, part, k)
+                rows.append(dict(dataset=ds, algo=name, balance=balance,
+                                 edge_imbalance=imb))
+                emit(f"imbalance/{ds}/{name}/{balance}", us, f"edge_imb={imb:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

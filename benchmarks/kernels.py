@@ -1,0 +1,71 @@
+"""Kernel micro-benchmarks: jnp reference throughput on CPU + interpret-mode
+correctness spot-check (TPU wall-times require hardware; the roofline for
+kernels comes from the dry-run)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.kernels.ell_spmv.ops import ell_spmv
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.mamba_scan.ops import selective_scan
+from repro.kernels.partition_score.ops import fennel_scores
+
+
+def run():
+    rng = np.random.default_rng(0)
+    # partition_score: 4096 vertices x 128 nbrs x K=64
+    nbr = rng.integers(-1, 64, size=(4096, 128)).astype(np.int32)
+    sizes = rng.random(64).astype(np.float32)
+    fn = jax.jit(lambda n, s: fennel_scores(n, s, 0.37, 1.5, use_pallas=False))
+    fn(nbr, sizes).block_until_ready()
+    _, us = timed(lambda: fn(nbr, sizes).block_until_ready(), repeats=5)
+    emit("kernels/partition_score/4096x128xK64", us,
+         f"scores_per_s={4096 * 64 / (us / 1e6):.2e}")
+
+    # ell_spmv: 65536 rows x 32
+    x = rng.random(65537).astype(np.float32)
+    cols = rng.integers(0, 65537, size=(65536, 32)).astype(np.int32)
+    fn2 = jax.jit(lambda x, c: ell_spmv(x, c, "sum", use_pallas=False))
+    fn2(x, cols).block_until_ready()
+    _, us = timed(lambda: fn2(x, cols).block_until_ready(), repeats=5)
+    emit("kernels/ell_spmv/65536x32", us,
+         f"edges_per_s={65536 * 32 / (us / 1e6):.2e}")
+
+    # flash attention ref: B2 H8 T1024 D64
+    q = jnp.asarray(rng.standard_normal((2, 8, 1024, 64)), jnp.float32)
+    fn3 = jax.jit(lambda q: flash_attention(q, q, q, use_pallas=False))
+    fn3(q).block_until_ready()
+    _, us = timed(lambda: fn3(q).block_until_ready(), repeats=3)
+    flops = 4 * 2 * 8 * 1024 * 1024 // 2 * 64
+    emit("kernels/flash_attention/2x8x1024x64", us,
+         f"gflops={flops / (us / 1e6) / 1e9:.1f}")
+
+    # mamba scan: B2 T256 D512 N16
+    x = jnp.asarray(rng.standard_normal((2, 256, 512)), jnp.float32)
+    dt = jnp.abs(x) * 0.05 + 0.01
+    a = jnp.asarray(-np.abs(rng.standard_normal((512, 16))) - 0.1, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((2, 256, 16)), jnp.float32)
+    c = jnp.asarray(rng.standard_normal((2, 256, 16)), jnp.float32)
+    dk = jnp.ones(512)
+    fn4 = jax.jit(lambda *a_: selective_scan(*a_, use_pallas=False)[0])
+    fn4(x, dt, a, b, c, dk).block_until_ready()
+    _, us = timed(lambda: fn4(x, dt, a, b, c, dk).block_until_ready(), repeats=3)
+    emit("kernels/mamba_scan/2x256x512x16", us,
+         f"steps_per_s={2 * 256 / (us / 1e6):.2e}")
+
+    # interpret-mode correctness spot checks (kernel body == oracle)
+    small = rng.integers(-1, 8, size=(16, 16)).astype(np.int32)
+    sz = rng.random(8).astype(np.float32)
+    got = fennel_scores(small, sz, 0.5, use_pallas=True, interpret=True)
+    want = fennel_scores(small, sz, 0.5, use_pallas=False)
+    ok = bool(np.allclose(np.asarray(got), np.asarray(want), atol=1e-5))
+    emit("kernels/interpret_check", 0.0, f"allclose={ok}")
+    assert ok
+    return True
+
+
+if __name__ == "__main__":
+    run()

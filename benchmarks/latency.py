@@ -1,0 +1,34 @@
+"""Paper §IV-A partitioning-latency analysis + the kernel-backed
+chunk-parallel variant's speed/quality trade (beyond-paper)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, timed
+from repro.core import get_partitioner
+from repro.core.cuttana_batched import partition_batched
+from repro.graph import edge_cut
+from repro.graph.generators import load_dataset
+
+
+def run(k: int = 8, dataset: str = "social-m", seed: int = 0):
+    graph = load_dataset(dataset, seed=seed)
+    rows = []
+    for name in ("fennel", "ldg", "heistream", "cuttana"):
+        part, us = timed(
+            get_partitioner(name), graph, k,
+            balance_mode="edge", order="random", seed=seed,
+        )
+        ec = edge_cut(graph, part)
+        rows.append(dict(algo=name, seconds=us / 1e6, edge_cut=ec))
+        emit(f"latency/{dataset}/{name}", us, f"edge_cut={ec:.4f}")
+    part, us = timed(
+        partition_batched, graph, k, balance_mode="edge", order="random",
+        seed=seed,
+    )
+    ec = edge_cut(graph, part)
+    rows.append(dict(algo="cuttana-batched", seconds=us / 1e6, edge_cut=ec))
+    emit(f"latency/{dataset}/cuttana-batched", us, f"edge_cut={ec:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

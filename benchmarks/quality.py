@@ -1,0 +1,38 @@
+"""Paper Table II: partitioning quality (λ_EC, λ_CV) across datasets,
+partitioners, and balance conditions (K=8)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, timed
+from repro.core import get_partitioner
+from repro.graph import quality_report
+from repro.graph.generators import load_dataset
+
+PARTITIONERS = ["cuttana", "fennel", "heistream", "ldg"]
+DATASETS = ["social-s", "web-s", "road-s", "ldbc-s"]
+
+
+def run(k: int = 8, datasets=None, order: str = "random", seed: int = 0):
+    rows = []
+    for ds in datasets or DATASETS:
+        graph = load_dataset(ds, seed=seed)
+        for balance in ("edge", "vertex"):
+            for name in PARTITIONERS:
+                fn = get_partitioner(name)
+                part, us = timed(
+                    fn, graph, k,
+                    epsilon=0.05, balance_mode=balance, order=order, seed=seed,
+                )
+                rep = quality_report(graph, part, k)
+                rows.append(dict(dataset=ds, balance=balance, algo=name,
+                                 seconds=us / 1e6, **rep))
+                emit(
+                    f"quality/{ds}/{balance}/{name}",
+                    us,
+                    f"edge_cut={rep['edge_cut']:.4f};cv={rep['comm_volume']:.4f};"
+                    f"edge_imb={rep['edge_imbalance']:.2f}",
+                )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+"""Paper Fig. 6: quality as a function of the number of partitions."""
+from __future__ import annotations
+
+from benchmarks.common import emit, timed
+from repro.core import get_partitioner
+from repro.graph import edge_cut
+from repro.graph.generators import load_dataset
+
+
+def run(ks=(2, 4, 8, 16, 32), datasets=("social-s", "web-s"), seed: int = 0):
+    rows = []
+    for ds in datasets:
+        graph = load_dataset(ds, seed=seed)
+        for k in ks:
+            for name in ("cuttana", "fennel", "heistream"):
+                part, us = timed(
+                    get_partitioner(name), graph, k,
+                    balance_mode="edge", order="random", seed=seed,
+                )
+                ec = edge_cut(graph, part)
+                rows.append(dict(dataset=ds, k=k, algo=name, edge_cut=ec))
+                emit(f"quality_vs_k/{ds}/k{k}/{name}", us, f"edge_cut={ec:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,144 @@
+"""Roofline aggregation: read runs/dryrun/*.json, compute the three terms per
+(arch x shape x mesh), name the bottleneck, and emit the EXPERIMENTS.md
+tables.
+
+    compute term    = dot_FLOPs_total / (chips x 197 TFLOP/s)
+    memory term     = HBM bytes / (chips x 819 GB/s)     [see note below]
+    collective term = collective bytes per shard / 50 GB/s per link
+
+Memory-term note: XLA's cost_analysis counts while bodies once, so its bytes
+are a *lower bound*; we report an analytic HBM estimate (params + optimizer
++ KV traffic per step) alongside, and use max(xla_scaled, analytic) for the
+bottleneck call.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+from repro.configs import ALIASES, SHAPES, get_config
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def analytic_hbm_bytes_per_chip(rec: dict) -> float:
+    """Per-chip HBM traffic per step: every resident parameter byte is read
+    once (weights are FSDP-sharded; the all-gathered copies are read from
+    VMEM-adjacent buffers but still land in HBM once), optimizer state
+    read+written for train, KV cache read for decode."""
+    cfg = get_config(rec["arch"])
+    chips = rec["chips"]
+    shape = SHAPES[rec["shape"]]
+    kind = shape["kind"]
+    n = cfg.param_count()
+    p_bytes = 2.0 * n / chips  # bf16 weights, sharded
+    if kind == "train":
+        # grads fp32 + m/v read+write (state dtype) + param write
+        sd = 2 if cfg.opt_state_dtype == "bfloat16" else 4
+        opt = (4 + 4 * sd + 2) * n / chips
+        act = 2.0 * shape["global_batch"] * shape["seq_len"] * cfg.d_model \
+            * cfg.num_layers * 2 / chips  # store+reload once w/ remat
+        return p_bytes * 3 + opt + act  # fwd + 2x bwd passes read weights
+    if kind == "prefill":
+        act = 2.0 * shape["global_batch"] * shape["seq_len"] * cfg.d_model \
+            * cfg.num_layers / chips
+        return p_bytes + act
+    # decode: weights + full KV cache read per token
+    kv = 0.0
+    b, s = shape["global_batch"], shape["seq_len"]
+    for spec in cfg.layers():
+        if spec.mixer == "attn":
+            eff = min(spec.window or s, s)
+            if cfg.use_mla:
+                kv += b * eff * (cfg.kv_lora_rank + cfg.qk_rope_dim) * 2
+            else:
+                kv += 2 * b * eff * cfg.n_kv_heads * cfg.head_dim * 2
+        elif spec.mixer == "mamba":
+            kv += b * cfg.mamba_expand * cfg.d_model * cfg.ssm_state * 4
+    return p_bytes + kv / chips
+
+
+def load_records(out_dir: str = "runs/dryrun") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def roofline_row(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    chips = rec["chips"]
+    compute_s = rec["dot_flops_total"] / (chips * PEAK_FLOPS)
+    xla_bytes = (rec.get("cost") or {}).get("xla_bytes_body_once") or 0.0
+    trip = max(rec.get("max_trip_count", 1.0), 1.0)
+    mem_analytic = analytic_hbm_bytes_per_chip(rec)
+    mem_s = max(xla_bytes * trip / chips, mem_analytic) / HBM_BW
+    coll_s = rec["total_collective_bytes_per_shard"] / ICI_BW
+    terms = {"compute": compute_s, "memory": mem_s, "collective": coll_s}
+    bottleneck = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    mfu_bound = (
+        rec["model_flops"] / (chips * PEAK_FLOPS) / step_s if step_s else 0.0
+    )
+    return dict(
+        arch=rec["arch"],
+        shape=rec["shape"],
+        mesh=rec["mesh"],
+        chips=chips,
+        compute_s=compute_s,
+        memory_s=mem_s,
+        collective_s=coll_s,
+        bottleneck=bottleneck,
+        model_flops_ratio=rec["model_flops"] / max(rec["dot_flops_total"], 1),
+        roofline_fraction=mfu_bound,
+        compile_s=rec.get("compile_s"),
+    )
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = (
+        "| arch | shape | mesh | compute_s | memory_s | collective_s | "
+        "bottleneck | useful/compiled FLOPs | roofline frac |\n"
+        "|---|---|---|---|---|---|---|---|---|\n"
+    )
+    body = ""
+    for r in rows:
+        body += (
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compute_s']:.3e} | {r['memory_s']:.3e} | "
+            f"{r['collective_s']:.3e} | **{r['bottleneck']}** | "
+            f"{r['model_flops_ratio']:.2f} | {r['roofline_fraction']:.3f} |\n"
+        )
+    return hdr + body
+
+
+def run(out_dir: str = "runs/dryrun"):
+    rows = []
+    for rec in load_records(out_dir):
+        row = roofline_row(rec)
+        if row is None:
+            status = rec.get("status", "?")
+            if status.startswith("skip"):
+                continue
+            emit(f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}", 0.0,
+                 f"status={status}")
+            continue
+        rows.append(row)
+        emit(
+            f"roofline/{row['arch']}/{row['shape']}/{row['mesh']}",
+            row["compute_s"] * 1e6,
+            f"bottleneck={row['bottleneck']};frac={row['roofline_fraction']:.3f};"
+            f"useful={row['model_flops_ratio']:.2f}",
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    rows = run()
+    print(markdown_table(rows))

@@ -1,0 +1,65 @@
+"""Benchmark entry: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV lines.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only quality,db,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="medium-size datasets (minutes instead of seconds)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (
+        ablation,
+        analytics,
+        db,
+        imbalance,
+        kernels,
+        latency,
+        quality,
+        quality_vs_k,
+        roofline,
+    )
+
+    suites = {
+        "quality": lambda: quality.run(
+            datasets=["social-s", "web-s", "road-s", "ldbc-s"]
+            if not args.full
+            else ["social-m", "web-m", "road-m", "ldbc-s"]
+        ),
+        "quality_vs_k": lambda: quality_vs_k.run(
+            ks=(2, 4, 8, 16) if not args.full else (2, 4, 8, 16, 32)
+        ),
+        "imbalance": imbalance.run,
+        "ablation": ablation.run,
+        "analytics": analytics.run,
+        "db": db.run,
+        "latency": lambda: latency.run(
+            dataset="social-s" if not args.full else "social-m"
+        ),
+        "kernels": kernels.run,
+        "roofline": roofline.run,
+    }
+    only = set(args.only.split(",")) if args.only else None
+    t0 = time.time()
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        print(f"# === {name} ===", flush=True)
+        try:
+            fn()
+        except Exception as e:  # keep the suite running
+            print(f"{name},0.0,ERROR={type(e).__name__}:{e}", flush=True)
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

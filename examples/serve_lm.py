@@ -1,0 +1,14 @@
+"""Serve a (reduced) model: real prefill + jitted greedy decode loop.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch reduced:jamba-v0.1-52b]
+"""
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="reduced:qwen3-8b")
+    args = ap.parse_args()
+    serve_main(["--arch", args.arch, "--batch", "2", "--prompt-len", "16",
+                "--gen", "8"])

@@ -1,0 +1,24 @@
+"""End-to-end driver: train the ~100M-param model for a few hundred steps
+with checkpointing (CPU: a few minutes; the same driver scales to pods).
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import sys
+
+from repro.launch.train import main as train_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_100m_ckpt")
+    args = ap.parse_args()
+    train_main([
+        "--arch", "repro-100m",
+        "--steps", str(args.steps),
+        "--global-batch", "16",
+        "--seq-len", "256",
+        "--ckpt-dir", args.ckpt_dir,
+        "--ckpt-every", "100",
+        "--log-every", "20",
+    ])

@@ -1,0 +1,65 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ must precede all other imports
+
+"""Hillclimb profiler: lower+compile one cell and print the dominant
+collectives (bytes x loop multiplier) and dot groups.
+
+    PYTHONPATH=src python scripts/inspect_cell.py --arch deepseek-coder-33b \
+        --shape train_4k [--multi-pod] [--top 15]
+"""
+import argparse
+import re
+from collections import defaultdict
+
+from repro.launch.dryrun import lower_cell
+from repro.launch.hlo_analysis import (
+    COLLECTIVE_OPS,
+    HloModule,
+    _DEF_RE,
+    _result_type,
+    _type_bytes,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+
+    lowered, mesh, meta = lower_cell(args.arch, args.shape, args.multi_pod)
+    compiled = lowered.compile()
+    hlo = compiled.as_text()
+    mod = HloModule(hlo)
+
+    items = []
+    for comp, lines in mod.comps.items():
+        mult = mod.mult.get(comp, 1.0)
+        for line in lines:
+            for op in COLLECTIVE_OPS:
+                if re.search(rf"\b{op}(?:-start)?\(", line):
+                    dm = _DEF_RE.match(line)
+                    if not dm:
+                        continue
+                    t = _result_type(dm.group(2))
+                    b = _type_bytes(t)
+                    meta_m = re.search(r'op_name="([^"]+)"', line)
+                    items.append(
+                        (b * mult, b, mult, op, t[:60],
+                         (meta_m.group(1)[-90:] if meta_m else comp[:40]))
+                    )
+                    break
+    items.sort(reverse=True)
+    total = sum(i[0] for i in items)
+    print(f"total collective bytes/shard/step: {total/1e9:.2f} GB "
+          f"({len(items)} collective ops)")
+    print(f"{'GB(total)':>10} {'MB(one)':>9} {'xN':>6}  op                shape/source")
+    for tot, b, m, op, t, src in items[: args.top]:
+        print(f"{tot/1e9:>10.2f} {b/1e6:>9.1f} {m:>6.0f}  {op:<17} {t}  <- {src}")
+
+
+if __name__ == "__main__":
+    main()

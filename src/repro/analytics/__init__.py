@@ -1,0 +1,23 @@
+"""Distributed graph analytics on the TPU mesh (paper §IV-B, Table IV).
+
+A Pregel-style vertex-program engine where vertex->device placement comes
+from a partitioner; halo-exchange volume is exactly the paper's
+communication-volume metric, and per-device edge counts are its straggler
+metric.
+"""
+from repro.analytics.engine import GraphEngine
+from repro.analytics.localize import LocalizedGraph, localize
+from repro.analytics.programs import PROGRAMS, cc_program, pagerank_program, sssp_program
+from repro.analytics.costmodel import CostModel, workload_cost
+
+__all__ = [
+    "GraphEngine",
+    "LocalizedGraph",
+    "localize",
+    "PROGRAMS",
+    "pagerank_program",
+    "cc_program",
+    "sssp_program",
+    "CostModel",
+    "workload_cost",
+]

@@ -1,0 +1,163 @@
+"""Turn (graph, partition) into per-device padded local structures.
+
+Index space on device p (all devices identical shapes, SPMD):
+
+    [0, Vmax)                  local vertex states
+    [Vmax, Vmax + K*H)         ghost states: slot Vmax + q*H + j holds the
+                               j-th vertex imported from partition q
+    Vmax + K*H                 identity slot (padding edges point here)
+
+``send_gather[q]`` on device p lists the local indices p must ship to q each
+iteration; after an all-to-all, ``recv[q]`` holds what q shipped to p, laid
+out exactly as p's ghost table expects. All shapes are static (padded to the
+max across devices) so one compiled program serves every device.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.graph.csr import CSRGraph
+
+
+@dataclasses.dataclass
+class LocalizedGraph:
+    k: int
+    v_max: int  # max local vertices per device
+    h_max: int  # max ghosts imported from any single partition
+    e_max: int  # max local edge slots per device
+    num_vertices: int
+    num_edges: int
+    # --- per-device arrays, leading axis = device/partition
+    local_to_global: np.ndarray  # int32[k, v_max], -1 pad
+    local_count: np.ndarray  # int32[k]
+    rows: np.ndarray  # int32[k, e_max] local row of each edge slot (v_max pad)
+    cols: np.ndarray  # int32[k, e_max] combined-index col (identity pad)
+    send_gather: np.ndarray  # int32[k, k, h_max] local idx to send (0 pad)
+    send_count: np.ndarray  # int32[k, k] true ghosts q imports from p
+    degrees_full: np.ndarray  # float32[k, v_max + k*h_max + 1] degree table
+    local_degrees: np.ndarray  # float32[k, v_max]
+    part: np.ndarray  # int32[|V|] original assignment
+    global_to_local: np.ndarray  # int32[|V|] local index of each vertex
+
+    @property
+    def state_len(self) -> int:
+        return self.v_max + self.k * self.h_max + 1
+
+    @property
+    def identity_slot(self) -> int:
+        return self.state_len - 1
+
+    # ---- communication accounting -----------------------------------------
+    def true_halo_messages(self) -> int:
+        """Σ_u D(u): exactly K·|V|·λ_CV (paper Eq. 4)."""
+        return int(self.send_count.sum())
+
+    def padded_halo_elements_per_iter(self) -> int:
+        """Elements actually moved by the padded all-to-all per iteration."""
+        return int(self.k * self.k * self.h_max)
+
+    def max_local_edges(self) -> int:
+        return int((self.rows != self.v_max).sum(axis=1).max())
+
+
+def localize(graph: CSRGraph, part: np.ndarray, k: int) -> LocalizedGraph:
+    part = np.asarray(part, dtype=np.int32)
+    n = graph.num_vertices
+    global_to_local = np.zeros(n, dtype=np.int32)
+    locals_of: list[np.ndarray] = []
+    for p in range(k):
+        ids = np.flatnonzero(part == p).astype(np.int32)
+        locals_of.append(ids)
+        global_to_local[ids] = np.arange(ids.shape[0], dtype=np.int32)
+    v_max = max(int(ids.shape[0]) for ids in locals_of) if k else 0
+    v_max = max(v_max, 1)
+
+    src_all = np.repeat(np.arange(n, dtype=np.int64), graph.degrees)
+    dst_all = graph.indices.astype(np.int64)
+    psrc = part[src_all]
+    pdst = part[dst_all]
+
+    # ghosts[p][q] = sorted unique vertices of partition q needed by p
+    ghosts: list[list[np.ndarray]] = [[None] * k for _ in range(k)]
+    h_max = 1
+    for p in range(k):
+        mask_p = psrc == p
+        for q in range(k):
+            if q == p:
+                ghosts[p][q] = np.empty(0, dtype=np.int64)
+                continue
+            need = np.unique(dst_all[mask_p & (pdst == q)])
+            ghosts[p][q] = need
+            h_max = max(h_max, need.shape[0])
+
+    e_counts = np.bincount(psrc, minlength=k)
+    e_max = max(int(e_counts.max()), 1)
+
+    local_to_global = np.full((k, v_max), -1, dtype=np.int32)
+    local_count = np.zeros(k, dtype=np.int32)
+    rows = np.full((k, e_max), v_max, dtype=np.int32)
+    state_len = v_max + k * h_max + 1
+    cols = np.full((k, e_max), state_len - 1, dtype=np.int32)
+    send_gather = np.zeros((k, k, h_max), dtype=np.int32)
+    send_count = np.zeros((k, k), dtype=np.int32)
+    degrees_full = np.zeros((k, state_len), dtype=np.float32)
+    local_degrees = np.zeros((k, v_max), dtype=np.float32)
+    deg = graph.degrees.astype(np.float32)
+
+    for p in range(k):
+        ids = locals_of[p]
+        local_to_global[p, : ids.shape[0]] = ids
+        local_count[p] = ids.shape[0]
+        local_degrees[p, : ids.shape[0]] = deg[ids]
+        degrees_full[p, : ids.shape[0]] = deg[ids]
+        # edges owned by p
+        mask_p = psrc == p
+        e_src = src_all[mask_p]
+        e_dst = dst_all[mask_p]
+        e_pdst = pdst[mask_p]
+        rows[p, : e_src.shape[0]] = global_to_local[e_src]
+        col_vals = np.empty(e_src.shape[0], dtype=np.int32)
+        intern = e_pdst == p
+        col_vals[intern] = global_to_local[e_dst[intern]]
+        for q in range(k):
+            sel = e_pdst == q
+            if q == p or not sel.any():
+                if q != p:
+                    # still need degree table slots zeroed (already zero)
+                    pass
+                continue
+            g = ghosts[p][q]
+            slot_base = v_max + q * h_max
+            # position of each dst within the sorted unique ghost list
+            pos = np.searchsorted(g, e_dst[sel])
+            col_vals[sel] = (slot_base + pos).astype(np.int32)
+            degrees_full[p, slot_base : slot_base + g.shape[0]] = deg[g]
+        cols[p, : e_src.shape[0]] = col_vals
+        # what every OTHER device must send to p -> recorded on the sender q
+        for q in range(k):
+            g = ghosts[p][q]
+            if q == p or g.shape[0] == 0:
+                continue
+            send_gather[q, p, : g.shape[0]] = global_to_local[g]
+            send_count[q, p] = g.shape[0]
+
+    return LocalizedGraph(
+        k=k,
+        v_max=v_max,
+        h_max=h_max,
+        e_max=e_max,
+        num_vertices=n,
+        num_edges=graph.num_edges,
+        local_to_global=local_to_global,
+        local_count=local_count,
+        rows=rows,
+        cols=cols,
+        send_gather=send_gather,
+        send_count=send_count,
+        degrees_full=degrees_full,
+        local_degrees=local_degrees,
+        part=part,
+        global_to_local=global_to_local,
+    )

@@ -1,0 +1,59 @@
+"""The paper's contribution: CUTTANA and the partitioner zoo.
+
+``get_partitioner(name)`` returns a callable
+``fn(graph, k, epsilon=..., balance_mode=..., order=..., seed=...) -> part``.
+Edge partitioners (vertex-cut) live in :mod:`repro.core.hdrf` and return an
+:class:`EdgePartition` via ``get_edge_partitioner``.
+"""
+from __future__ import annotations
+
+from repro.core import cuttana, fennel, heistream_like, ldg
+from repro.core.base import FennelParams
+from repro.core.cuttana import CuttanaResult, refine_any
+from repro.core.cuttana_batched import partition_batched
+from repro.core.hdrf import EdgePartition, partition_ginger, partition_hdrf
+from repro.core.random_hash import partition_chunked, partition_hash, partition_random
+
+def _restream(graph, k, **kw):
+    from repro.core.restream import partition_restream
+
+    kw.setdefault("base", "cuttana")
+    return partition_restream(graph, k, **kw)
+
+
+PARTITIONERS = {
+    "cuttana": cuttana.partition,
+    "cuttana-batched": partition_batched,
+    "cuttana-restream": _restream,
+    "fennel": fennel.partition,
+    "ldg": ldg.partition,
+    "heistream": heistream_like.partition,
+    "random": partition_random,
+    "hash": partition_hash,
+    "chunked": partition_chunked,
+}
+
+EDGE_PARTITIONERS = {
+    "hdrf": partition_hdrf,
+    "ginger": partition_ginger,
+}
+
+
+def get_partitioner(name: str):
+    return PARTITIONERS[name]
+
+
+def get_edge_partitioner(name: str):
+    return EDGE_PARTITIONERS[name]
+
+
+__all__ = [
+    "PARTITIONERS",
+    "EDGE_PARTITIONERS",
+    "get_partitioner",
+    "get_edge_partitioner",
+    "FennelParams",
+    "CuttanaResult",
+    "EdgePartition",
+    "refine_any",
+]

@@ -1,0 +1,78 @@
+"""CUTTANA's prioritized vertex buffer (paper §III-A, Algorithm 1).
+
+A bounded max-priority queue keyed by the *buffer score* (Eq. 6):
+
+    score(v) = |N(v)| / D_max  +  theta * assigned(v) / |N(v)|
+
+Higher score => evicted (placed) earlier. Score updates (a neighbour got
+assigned) are handled with the classic lazy-heap trick: push a fresh entry and
+invalidate the old one by sequence comparison on pop.
+"""
+from __future__ import annotations
+
+import heapq
+
+import numpy as np
+
+
+class PriorityBuffer:
+    def __init__(self, capacity: int, d_max: int, theta: float = 1.0):
+        self.capacity = int(capacity)
+        self.d_max = max(int(d_max), 1)
+        self.theta = float(theta)
+        self._heap: list[tuple[float, int, int]] = []  # (-score, v, version)
+        self._version: dict[int, int] = {}  # v -> latest version
+        self._nbrs: dict[int, np.ndarray] = {}
+        self._assigned: dict[int, int] = {}
+        self._size = 0
+
+    def __len__(self) -> int:
+        return self._size
+
+    @property
+    def full(self) -> bool:
+        return self._size >= self.capacity
+
+    def score(self, v: int) -> float:
+        deg = self._nbrs[v].shape[0]
+        return deg / self.d_max + self.theta * self._assigned[v] / max(deg, 1)
+
+    # ------------------------------------------------------------------ ops
+    def push(self, v: int, nbrs: np.ndarray, assigned_count: int) -> None:
+        assert v not in self._nbrs
+        self._nbrs[v] = nbrs
+        self._assigned[v] = int(assigned_count)
+        self._version[v] = 0
+        heapq.heappush(self._heap, (-self.score(v), v, 0))
+        self._size += 1
+
+    def contains(self, v: int) -> bool:
+        return v in self._nbrs
+
+    def notify_assigned(self, v: int) -> bool:
+        """A neighbour of buffered ``v`` was placed. Returns True if ``v`` is
+        now *complete* (all neighbours assigned) and should be evicted now."""
+        self._assigned[v] += 1
+        if self._assigned[v] >= self._nbrs[v].shape[0]:
+            return True
+        ver = self._version[v] + 1
+        self._version[v] = ver
+        heapq.heappush(self._heap, (-self.score(v), v, ver))
+        return False
+
+    def remove(self, v: int) -> np.ndarray:
+        """Remove ``v`` (used for complete-eviction); stale heap entries are
+        skipped lazily on pop."""
+        nbrs = self._nbrs.pop(v)
+        del self._assigned[v]
+        del self._version[v]
+        self._size -= 1
+        return nbrs
+
+    def pop_best(self) -> tuple[int, np.ndarray]:
+        """Pop the vertex with the highest buffer score."""
+        while self._heap:
+            neg, v, ver = heapq.heappop(self._heap)
+            if v in self._nbrs and self._version[v] == ver:
+                return v, self.remove(v)
+        raise IndexError("pop from empty buffer")

@@ -1,0 +1,201 @@
+"""CUTTANA: prioritized buffered streaming + coarsened refinement (paper §III).
+
+Phase 1 (Algorithm 1): stream vertices; vertices with degree >= D_max are
+placed immediately (their premature-assignment risk is low, Thm. 1); the rest
+enter a bounded priority buffer ordered by buffer score (Eq. 6). On overflow
+the best-scored vertex is evicted and placed with the FENNEL/PowerLyra hybrid
+score (Eq. 7). Placement of a vertex bumps the buffer score of its buffered
+neighbours; a buffered vertex whose neighbourhood is fully assigned is evicted
+immediately. Every placement also picks a *sub-partition* (Def. 2).
+
+Phase 2: greedy trades on the coarsened sub-partition graph until maximal
+(or early-stopped by ``thresh``), then vertices inherit their sub-partition's
+final partition.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.core.base import (
+    FennelParams,
+    PartitionState,
+    finalize,
+    make_fennel_score,
+)
+from repro.core.buffer import PriorityBuffer
+from repro.core.refinement import Refiner, build_subpartition_graph
+from repro.core.subpartition import SubPartitioner
+from repro.graph.csr import CSRGraph
+from repro.graph.stream import stream_order
+
+
+@dataclasses.dataclass
+class CuttanaResult:
+    part: np.ndarray
+    sub_of: np.ndarray
+    sub_part: np.ndarray  # final partition of each sub-partition
+    refine_moves: int
+    refine_improvement: float
+    phase1_seconds: float
+    phase2_seconds: float
+
+
+def partition(
+    graph: CSRGraph,
+    k: int,
+    epsilon: float = 0.05,
+    balance_mode: str = "edge",
+    d_max: int = 1000,
+    max_qsize: int | None = None,
+    theta: float = 1.0,
+    subparts_per_partition: int | None = None,
+    use_buffer: bool = True,
+    use_refinement: bool = True,
+    thresh: float = 0.0,
+    max_moves: int | None = None,
+    fennel_params: FennelParams | None = None,
+    order: str = "natural",
+    seed: int = 0,
+    return_detail: bool = False,
+):
+    """Full CUTTANA partitioner. Ablations: ``use_buffer=False`` /
+    ``use_refinement=False`` reproduce the paper's Table III rows
+    (both off == plain FENNEL with Eq. 7 scoring)."""
+    n = graph.num_vertices
+    if max_qsize is None:
+        max_qsize = max(1024, n // 10)  # paper: 1e6 for 10^7..10^8-vertex graphs
+    if subparts_per_partition is None:
+        # paper: K'/K = 4096 for big graphs; scale down for small ones so that
+        # sub-partitions still hold >= ~8 vertices on average.
+        subparts_per_partition = int(max(8, min(4096, n // (8 * k))))
+
+    params = fennel_params or FennelParams(hybrid=(balance_mode == "edge"))
+    state = PartitionState.create(graph, k, epsilon, balance_mode, seed)
+    score_fn = make_fennel_score(graph, k, params, balance_mode)
+    subp = SubPartitioner(
+        graph,
+        k,
+        subparts_per_partition,
+        epsilon=max(epsilon, 0.10),
+        balance_mode=balance_mode,
+        seed=seed,
+    )
+    indptr, indices = graph.indptr, graph.indices
+    buf = PriorityBuffer(max_qsize, d_max, theta)
+
+    def place(v: int, nbrs: np.ndarray) -> None:
+        """partitionVertex (Algorithm 1 line 15): place + sub-place + notify."""
+        worklist = [(v, nbrs)]
+        while worklist:
+            u, un = worklist.pop()
+            hist = state.neighbor_histogram(un)
+            scores = score_fn(state, hist)
+            allowed = ~state.would_overflow(un.size)
+            p = state.argmax_tiebreak(scores, allowed)
+            state.assign(u, p, un.size)
+            subp.assign(u, p, un, un.size)
+            # bump buffered neighbours; fully-known ones are placed right away
+            for w in un:
+                wi = int(w)
+                if buf.contains(wi) and buf.notify_assigned(wi):
+                    worklist.append((wi, buf.remove(wi)))
+
+    t0 = time.perf_counter()
+    if not use_buffer:
+        for v in stream_order(graph, order, seed):
+            place(int(v), indices[indptr[v] : indptr[v + 1]])
+    else:
+        for v in stream_order(graph, order, seed):
+            v = int(v)
+            if state.part_of[v] != -1:
+                continue  # already placed via complete-eviction cascade
+            nbrs = indices[indptr[v] : indptr[v + 1]]
+            if nbrs.size >= d_max:
+                place(v, nbrs)
+                continue
+            assigned = int((state.part_of[nbrs] != -1).sum())
+            if assigned == nbrs.size and nbrs.size > 0:
+                place(v, nbrs)  # complete already
+                continue
+            buf.push(v, nbrs, assigned)
+            if buf.full:
+                u, un = buf.pop_best()
+                place(u, un)
+        while len(buf):
+            u, un = buf.pop_best()
+            place(u, un)
+    phase1_s = time.perf_counter() - t0
+
+    part = finalize(state)
+    sub_of = subp.sub_of.copy()
+    kp = subp.kp
+    sub_part = np.repeat(np.arange(k, dtype=np.int64), subp.s)
+
+    t1 = time.perf_counter()
+    moves, improvement = 0, 0.0
+    if use_refinement and k > 1:
+        w = build_subpartition_graph(graph, sub_of, kp)
+        if balance_mode == "edge":
+            size = subp.sub_e_counts.copy()
+            total = float(graph.indices.shape[0])
+        else:
+            size = subp.sub_v_counts.copy()
+            total = float(n)
+        refiner = Refiner(w, sub_part, size, k, epsilon, total_mass=total)
+        stats = refiner.refine(thresh=thresh, max_moves=max_moves)
+        moves, improvement = stats.moves, stats.cut_improvement
+        sub_part = refiner.sub_part.copy()
+        part = sub_part[sub_of].astype(np.int32)
+    phase2_s = time.perf_counter() - t1
+
+    if return_detail:
+        return CuttanaResult(
+            part=part,
+            sub_of=sub_of,
+            sub_part=sub_part,
+            refine_moves=moves,
+            refine_improvement=improvement,
+            phase1_seconds=phase1_s,
+            phase2_seconds=phase2_s,
+        )
+    return part
+
+
+def refine_any(
+    graph: CSRGraph,
+    part: np.ndarray,
+    k: int,
+    epsilon: float = 0.05,
+    balance_mode: str = "edge",
+    subparts_per_partition: int | None = None,
+    thresh: float = 0.0,
+    seed: int = 0,
+) -> np.ndarray:
+    """Paper §III-B: refinement applies to *any* partitioner's output.
+
+    Builds sub-partitions by re-streaming vertices inside their fixed
+    partition assignment, then runs phase-2 trades.
+    """
+    n = graph.num_vertices
+    if subparts_per_partition is None:
+        subparts_per_partition = int(max(8, min(4096, n // (8 * k))))
+    subp = SubPartitioner(
+        graph, k, subparts_per_partition, balance_mode=balance_mode, seed=seed
+    )
+    indptr, indices = graph.indptr, graph.indices
+    for v in range(n):
+        nbrs = indices[indptr[v] : indptr[v + 1]]
+        subp.assign(v, int(part[v]), nbrs, nbrs.size)
+    kp = subp.kp
+    sub_part = np.repeat(np.arange(k, dtype=np.int64), subp.s)
+    w = build_subpartition_graph(graph, subp.sub_of, kp)
+    if balance_mode == "edge":
+        size, total = subp.sub_e_counts, float(graph.indices.shape[0])
+    else:
+        size, total = subp.sub_v_counts, float(n)
+    refiner = Refiner(w, sub_part, size, k, epsilon, total_mass=total)
+    refiner.refine(thresh=thresh)
+    return refiner.sub_part[subp.sub_of].astype(np.int32)

@@ -1,0 +1,114 @@
+"""Chunk-parallel streaming phase (beyond-paper, §III-C TPU adaptation).
+
+The paper hides buffering/refinement cost behind a thread pipeline. A TPU has
+no host threads to spare but has a very wide VPU, so we instead *batch* the
+scoring loop: the stream is consumed in chunks of C vertices; one fused
+kernel call (:mod:`repro.kernels.partition_score`) computes all C x K
+neighbour histograms + penalties, then a cheap host loop applies assignments
+in stream order (partition sizes are corrected per assignment; neighbour
+histograms are allowed to be one-chunk stale - the usual bulk-synchronous
+relaxation, quality impact measured in benchmarks/latency.py).
+
+High-degree vertices (> ``sample_cap`` neighbours) are scored on a uniform
+neighbour sample with the histogram rescaled - Thm. 1 says exact counts
+matter least exactly for them.
+
+Phase 2 (refinement) is unchanged - it is already graph-size independent.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.base import FennelParams, PartitionState, finalize
+from repro.core.refinement import Refiner, build_subpartition_graph
+from repro.core.subpartition import SubPartitioner
+from repro.graph.csr import CSRGraph
+from repro.graph.stream import stream_order
+from repro.kernels.partition_score.ops import fennel_scores
+
+
+def partition_batched(
+    graph: CSRGraph,
+    k: int,
+    epsilon: float = 0.05,
+    balance_mode: str = "edge",
+    chunk: int = 512,
+    sample_cap: int = 512,
+    use_refinement: bool = True,
+    subparts_per_partition: int | None = None,
+    thresh: float = 0.0,
+    order: str = "natural",
+    seed: int = 0,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+) -> np.ndarray:
+    n = graph.num_vertices
+    m = max(graph.num_edges, 1)
+    state = PartitionState.create(graph, k, epsilon, balance_mode, seed)
+    if subparts_per_partition is None:
+        subparts_per_partition = int(max(8, min(4096, n // (8 * k))))
+    subp = SubPartitioner(
+        graph, k, subparts_per_partition,
+        epsilon=max(epsilon, 0.10), balance_mode=balance_mode, seed=seed,
+    )
+    params = FennelParams(hybrid=(balance_mode == "edge"))
+    alpha = params.alpha_scale * np.sqrt(k) * m / (max(n, 1) ** 1.5)
+    gamma = params.gamma
+    mu = n / max(graph.indices.shape[0], 1)
+    rng = np.random.default_rng(seed)
+    indptr, indices = graph.indptr, graph.indices
+    ids = stream_order(graph, order, seed)
+
+    for start in range(0, n, chunk):
+        batch = ids[start : start + chunk]
+        c = len(batch)
+        degs = (indptr[batch + 1] - indptr[batch]).astype(np.int64)
+        width = int(min(max(degs.max(), 1), sample_cap))
+        nbr_parts = np.full((c, width), -1, dtype=np.int32)
+        scale = np.ones(c, dtype=np.float64)
+        nbr_cache: list[np.ndarray] = []
+        for i, v in enumerate(batch):
+            nb = indices[indptr[v] : indptr[v + 1]]
+            nbr_cache.append(nb)
+            if nb.size > width:  # degree-capped sampling (Thm. 1 regime)
+                sel = rng.choice(nb.size, size=width, replace=False)
+                nbp = state.part_of[nb[sel]]
+                scale[i] = nb.size / width
+            else:
+                nbp = state.part_of[nb]
+            nbr_parts[i, : nbp.size] = nbp
+        # one fused kernel call scores the whole chunk (histogram part)
+        sizes = np.zeros(k, np.float32)  # penalty applied on host (fresh)
+        hist = np.asarray(
+            fennel_scores(
+                nbr_parts, sizes, 0.0, gamma,
+                use_pallas=use_pallas, interpret=interpret,
+            ),
+            dtype=np.float64,
+        ) * scale[:, None]
+        # host loop: fresh penalty + capacity, stale-by-chunk histograms
+        for i, v in enumerate(batch):
+            if params.hybrid:
+                size = 0.5 * (state.v_counts + mu * state.e_counts)
+            else:
+                size = state.v_counts
+            scores = hist[i] - alpha * gamma * np.power(
+                np.maximum(size, 0.0), gamma - 1.0
+            )
+            allowed = ~state.would_overflow(int(degs[i]))
+            p = state.argmax_tiebreak(scores, allowed)
+            state.assign(int(v), p, int(degs[i]))
+            subp.assign(int(v), p, nbr_cache[i], int(degs[i]))
+
+    part = finalize(state)
+    if use_refinement and k > 1:
+        w = build_subpartition_graph(graph, subp.sub_of, subp.kp)
+        sub_part = np.repeat(np.arange(k, dtype=np.int64), subp.s)
+        if balance_mode == "edge":
+            size, total = subp.sub_e_counts, float(graph.indices.shape[0])
+        else:
+            size, total = subp.sub_v_counts, float(n)
+        r = Refiner(w, sub_part, size, k, epsilon, total_mass=total)
+        r.refine(thresh=thresh)
+        part = r.sub_part[subp.sub_of].astype(np.int32)
+    return part

@@ -1,0 +1,36 @@
+"""FENNEL streaming vertex partitioner (Tsourakakis et al., WSDM'14).
+
+This is the paper's primary baseline *and* the scoring core CUTTANA builds on
+(paper Eq. 7). ``hybrid=True`` + ``balance_mode="edge"`` reproduces the
+edge-balanced variant the paper added to FENNEL for its RQ2 study.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.base import FennelParams, PartitionState, finalize, make_fennel_score
+from repro.graph.csr import CSRGraph
+from repro.graph.stream import stream_order
+
+
+def partition(
+    graph: CSRGraph,
+    k: int,
+    epsilon: float = 0.05,
+    balance_mode: str = "vertex",
+    params: FennelParams | None = None,
+    order: str = "natural",
+    seed: int = 0,
+) -> np.ndarray:
+    params = params or FennelParams()
+    state = PartitionState.create(graph, k, epsilon, balance_mode, seed)
+    score_fn = make_fennel_score(graph, k, params, balance_mode)
+    indptr, indices = graph.indptr, graph.indices
+    for v in stream_order(graph, order, seed):
+        nbrs = indices[indptr[v] : indptr[v + 1]]
+        hist = state.neighbor_histogram(nbrs)
+        scores = score_fn(state, hist)
+        allowed = ~state.would_overflow(nbrs.size)
+        p = state.argmax_tiebreak(scores, allowed)
+        state.assign(int(v), p, nbrs.size)
+    return finalize(state)

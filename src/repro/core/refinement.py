@@ -1,0 +1,309 @@
+"""CUTTANA Phase 2: coarsened refinement (paper §III-B).
+
+The sub-partition graph (Def. 3) is coarse enough to hold in memory for any
+input graph, so refinement cost is independent of |V|, |E| (paper's headline
+theoretical property). We maintain, exactly as the paper:
+
+  * ``W``    - K'xK' weighted sub-partition adjacency (diag zeroed),
+  * ``M``    - K'xK matrix, M[i,p] = sum_j W[i,j] * [P'(j) = p]
+               (so ECP[i,p] = total_w[i] - M[i,p], Eq. 8),
+  * ``DEC``  - DEC[i, dst] = ECP[i, src] - ECP[i, dst] = M[i,dst] - M[i,src]
+               (Eq. 9),
+  * ``MS``   - for every (src, dst) partition pair, a max-segment-tree over
+               the DEC values of sub-partitions currently in ``src``
+               (find-best O(1) at the root, update O(log(K'/K)), Lemma 1).
+
+After a trade we update exactly the O(K') entries of Theorem 2. Feasibility
+(the balance condition) is enforced at query time with a pruned descent of the
+segment tree, so capacity-blocked trades are skipped without being lost.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.graph.csr import CSRGraph
+
+NEG_INF = -np.inf
+
+
+def build_subpartition_graph(
+    graph: CSRGraph, sub_of: np.ndarray, kp: int
+) -> np.ndarray:
+    """Dense K'xK' weighted sub-partition adjacency; W[i,j] = #edges between
+    members of S_i and S_j (diagonal zeroed; symmetric counts halved once by
+    construction since CSR stores both directions)."""
+    src = np.repeat(np.arange(graph.num_vertices, dtype=np.int64), graph.degrees)
+    si = sub_of[src].astype(np.int64)
+    sj = sub_of[graph.indices].astype(np.int64)
+    key = si * kp + sj
+    counts = np.bincount(key, minlength=kp * kp).astype(np.float64)
+    w = counts.reshape(kp, kp)
+    w = 0.5 * (w + w.T)  # symmetric storage counted each edge twice -> halve
+    np.fill_diagonal(w, 0.0)
+    return w
+
+
+@dataclasses.dataclass
+class RefineStats:
+    moves: int = 0
+    cut_improvement: float = 0.0
+    stopped_reason: str = ""
+
+
+class Refiner:
+    def __init__(
+        self,
+        w: np.ndarray,
+        sub_part: np.ndarray,  # int[K'] -> current partition of each sub-part
+        size: np.ndarray,  # float[K'] balance mass of each sub-part
+        k: int,
+        epsilon: float,
+        total_mass: float | None = None,
+    ):
+        self.kp = w.shape[0]
+        self.k = k
+        self.w = w
+        self.sub_part = sub_part.astype(np.int64).copy()
+        self.size = size.astype(np.float64)
+        total = float(self.size.sum()) if total_mass is None else total_mass
+        self.cap = (1.0 + epsilon) * total / k
+        self.part_load = np.bincount(
+            self.sub_part, weights=self.size, minlength=k
+        ).astype(np.float64)
+        self.total_w = w.sum(axis=1)
+        onehot = np.zeros((self.kp, k), dtype=np.float64)
+        onehot[np.arange(self.kp), self.sub_part] = 1.0
+        self.m = w @ onehot  # M[i, p]
+        # ------------------------------------------------------ segment trees
+        # Balance is by MASS, not count: many near-empty sub-partitions can
+        # legally crowd into one partition, so slot capacity must be the
+        # worst case K' (Lemma 1 bounds the EXPECTED count, not the max).
+        self.cap2 = 1 << int(np.ceil(np.log2(max(self.kp, 2))))
+        self.tree = np.full((k, k, 2 * self.cap2), NEG_INF, dtype=np.float64)
+        self.owner = np.full((k, self.cap2), -1, dtype=np.int64)
+        self.slot_of = np.full(self.kp, -1, dtype=np.int64)
+        self._free: list[list[int]] = [list(range(self.cap2 - 1, -1, -1)) for _ in range(k)]
+        for i in range(self.kp):
+            self._alloc_slot(i, int(self.sub_part[i]))
+            self._write_entries(i)
+
+    # ------------------------------------------------------------- slot mgmt
+    def _alloc_slot(self, i: int, p: int) -> None:
+        slot = self._free[p].pop()
+        self.slot_of[i] = slot
+        self.owner[p, slot] = i
+
+    def _release_slot(self, i: int, p: int) -> None:
+        slot = int(self.slot_of[i])
+        self.owner[p, slot] = -1
+        self._free[p].append(slot)
+        # clear entries for this slot in every (p, dst) tree
+        for dst in range(self.k):
+            if dst != p:
+                self._update(p, dst, slot, NEG_INF)
+
+    # ------------------------------------------------------------- tree ops
+    def _update(self, src: int, dst: int, slot: int, val: float) -> None:
+        t = self.tree[src, dst]
+        node = self.cap2 + slot
+        t[node] = val
+        node >>= 1
+        while node >= 1:
+            new = max(t[2 * node], t[2 * node + 1])
+            if t[node] == new:
+                break
+            t[node] = new
+            node >>= 1
+
+    def _write_entries(self, i: int) -> None:
+        """(Re)write DEC entries of sub-partition ``i`` for all destinations."""
+        p = int(self.sub_part[i])
+        slot = int(self.slot_of[i])
+        mi = self.m[i]
+        base = mi[p]
+        for dst in range(self.k):
+            if dst != p:
+                self._update(p, dst, slot, mi[dst] - base)
+
+    def _best_feasible(self, src: int, dst: int, floor: float) -> tuple[int, float] | None:
+        """Best DEC > floor among feasible moves src->dst (pruned descent)."""
+        t = self.tree[src, dst]
+        if t[1] <= floor:
+            return None
+        room = self.cap - self.part_load[dst]
+        best_slot, best_val = -1, floor
+        stack = [1]
+        while stack:
+            node = stack.pop()
+            if t[node] <= best_val:
+                continue
+            if node >= self.cap2:  # leaf
+                slot = node - self.cap2
+                i = self.owner[src, slot]
+                if i >= 0 and self.size[i] <= room + 1e-9:
+                    best_slot, best_val = slot, t[node]
+            else:
+                # visit the larger child first for tighter pruning
+                l, r = 2 * node, 2 * node + 1
+                if t[l] >= t[r]:
+                    stack.extend((r, l))
+                else:
+                    stack.extend((l, r))
+        return None if best_slot < 0 else (best_slot, best_val)
+
+    # ------------------------------------------------------------- main API
+    def best_move(self, thresh: float = 0.0) -> tuple[int, int, float] | None:
+        """Globally best feasible trade: (sub_part_id, dst, dec) or None."""
+        best: tuple[int, int, float] | None = None
+        floor = thresh
+        for src in range(self.k):
+            for dst in range(self.k):
+                if src == dst:
+                    continue
+                got = self._best_feasible(src, dst, floor)
+                if got is not None:
+                    slot, val = got
+                    best = (int(self.owner[src, slot]), dst, float(val))
+                    floor = val
+        return best
+
+    def apply_move(self, i: int, dst: int) -> float:
+        """Apply trade <S_i, dst>; returns the edge-cut decrease."""
+        src = int(self.sub_part[i])
+        assert src != dst
+        dec = float(self.m[i, dst] - self.m[i, src])
+        nbrs = np.flatnonzero(self.w[i])
+        wvals = self.w[i, nbrs]
+        # --- M updates for neighbours (Eq. 10 in M-form)
+        self.m[nbrs, src] -= wvals
+        self.m[nbrs, dst] += wvals
+        # --- move i itself
+        self._release_slot(i, src)
+        self.sub_part[i] = dst
+        self.part_load[src] -= self.size[i]
+        self.part_load[dst] += self.size[i]
+        self._alloc_slot(i, dst)
+        self._write_entries(i)
+        # --- Theorem 2 updates for neighbours
+        for j in nbrs:
+            q = int(self.sub_part[j])
+            slot = int(self.slot_of[j])
+            mj = self.m[j]
+            base = mj[q]
+            if q == src or q == dst:
+                for d in range(self.k):
+                    if d != q:
+                        self._update(q, d, slot, mj[d] - base)
+            else:
+                if src != q:
+                    self._update(q, src, slot, mj[src] - base)
+                if dst != q:
+                    self._update(q, dst, slot, mj[dst] - base)
+        return dec
+
+    def refine(
+        self, thresh: float = 0.0, max_moves: int | None = None
+    ) -> RefineStats:
+        stats = RefineStats()
+        while True:
+            if max_moves is not None and stats.moves >= max_moves:
+                stats.stopped_reason = "max_moves"
+                return stats
+            mv = self.best_move(thresh)
+            if mv is None:
+                stats.stopped_reason = "maximal" if thresh <= 0 else "thresh"
+                return stats
+            i, dst, dec = mv
+            got = self.apply_move(i, dst)
+            assert abs(got - dec) < 1e-6
+            stats.moves += 1
+            stats.cut_improvement += got
+
+    # ------------------------------------------------------------- debugging
+    def current_cut(self) -> float:
+        """Edge-cut of the coarsened graph (Prop. 1)."""
+        same = self.sub_part[:, None] == self.sub_part[None, :]
+        return float(self.w[~same].sum() / 2.0)
+
+    def check_invariants(self) -> None:
+        onehot = np.zeros((self.kp, self.k))
+        onehot[np.arange(self.kp), self.sub_part] = 1.0
+        np.testing.assert_allclose(self.m, self.w @ onehot, atol=1e-6)
+        loads = np.bincount(self.sub_part, weights=self.size, minlength=self.k)
+        np.testing.assert_allclose(self.part_load, loads, atol=1e-6)
+        for src in range(self.k):
+            for dst in range(self.k):
+                if src == dst:
+                    continue
+                t = self.tree[src, dst]
+                for slot in range(self.cap2):
+                    i = self.owner[src, slot]
+                    expect = (
+                        self.m[i, dst] - self.m[i, src] if i >= 0 else NEG_INF
+                    )
+                    got = t[self.cap2 + slot]
+                    if i >= 0:
+                        assert abs(got - expect) < 1e-6, (src, dst, slot, got, expect)
+                    else:
+                        assert got == NEG_INF
+
+
+# --------------------------------------------------------------------- swaps
+def best_swap(r: "Refiner") -> tuple[int, int, float] | None:
+    """Paper §VI future work: when single trades are balance-blocked, a
+    *pairwise swap* <S_i in V_a, S_j in V_b> can still improve quality while
+    keeping both partitions within capacity. Returns the best (i, j, gain)
+    with gain = DEC_i(a->b) + DEC_j(b->a) - 2*W(S_i,S_j), or None.
+
+    O(K'^2) scan over cross-partition neighbour pairs - run only when
+    ``refine`` stalls (the greedy single-trade loop is the common path)."""
+    best: tuple[int, int, float] | None = None
+    kp = r.kp
+    for i in range(kp):
+        a = int(r.sub_part[i])
+        nbrs = np.flatnonzero(r.w[i])
+        for j in nbrs:
+            j = int(j)
+            if j <= i:
+                continue
+            b = int(r.sub_part[j])
+            if a == b:
+                continue
+            gain = (
+                (r.m[i, b] - r.m[i, a])
+                + (r.m[j, a] - r.m[j, b])
+                - 2.0 * r.w[i, j]  # they stop being cut towards each other... twice-counted
+            )
+            if gain <= 1e-9:
+                continue
+            # balance: dest gains size[x] - size[y]
+            if r.part_load[b] + r.size[i] - r.size[j] > r.cap + 1e-9:
+                continue
+            if r.part_load[a] + r.size[j] - r.size[i] > r.cap + 1e-9:
+                continue
+            if best is None or gain > best[2]:
+                best = (i, j, float(gain))
+    return best
+
+
+def refine_with_swaps(r: "Refiner", thresh: float = 0.0,
+                      max_rounds: int = 50) -> dict:
+    """Alternate greedy single trades with pairwise swaps until neither
+    improves (a strictly larger move class than the paper's maximality)."""
+    moves = swaps = 0
+    improvement = 0.0
+    for _ in range(max_rounds):
+        stats = r.refine(thresh=thresh)
+        moves += stats.moves
+        improvement += stats.cut_improvement
+        sw = best_swap(r)
+        if sw is None:
+            break
+        i, j, gain = sw
+        a, b = int(r.sub_part[i]), int(r.sub_part[j])
+        got = r.apply_move(i, b) + r.apply_move(j, a)
+        improvement += got
+        swaps += 1
+    return {"moves": moves, "swaps": swaps, "improvement": improvement}

@@ -1,0 +1,69 @@
+"""Restreaming (Nishimura & Ugander; Awadelkarim & Ugander) with CUTTANA as
+the core partitioner - the paper's Related-Work positioning: "CUTTANA can be
+used in restreaming as the core partitioner for faster convergence".
+
+Pass 1 runs any registered partitioner; passes 2..n re-stream vertices with
+the FULL previous assignment visible (no premature-assignment problem at
+all), reassigning each vertex greedily under the balance condition; an
+optional final refinement pass applies phase-2 trades.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import get_partitioner
+from repro.core.base import FennelParams, PartitionState, make_fennel_score
+from repro.core.cuttana import refine_any
+from repro.graph.csr import CSRGraph
+from repro.graph.stream import stream_order
+
+
+def partition_restream(
+    graph: CSRGraph,
+    k: int,
+    passes: int = 3,
+    base: str = "cuttana",
+    epsilon: float = 0.05,
+    balance_mode: str = "edge",
+    final_refine: bool = True,
+    order: str = "random",
+    seed: int = 0,
+) -> np.ndarray:
+    part = get_partitioner(base)(
+        graph, k, epsilon=epsilon, balance_mode=balance_mode,
+        order=order, seed=seed,
+    )
+    indptr, indices = graph.indptr, graph.indices
+    deg = graph.degrees
+    params = FennelParams(hybrid=(balance_mode == "edge"))
+    for p in range(1, passes):
+        state = PartitionState.create(graph, k, epsilon, balance_mode, seed + p)
+        state.part_of[:] = part
+        state.v_counts[:] = np.bincount(part, minlength=k)
+        state.e_counts[:] = np.bincount(
+            part, weights=deg.astype(np.float64), minlength=k
+        )
+        score_fn = make_fennel_score(graph, k, params, balance_mode)
+        for v in stream_order(graph, order, seed + p):
+            v = int(v)
+            d = int(deg[v])
+            cur = int(state.part_of[v])
+            # remove v, score against the full assignment, reinsert
+            state.v_counts[cur] -= 1
+            state.e_counts[cur] -= d
+            nbrs = indices[indptr[v] : indptr[v + 1]]
+            hist = state.neighbor_histogram(nbrs)
+            scores = score_fn(state, hist)
+            allowed = ~state.would_overflow(d)
+            allowed[cur] = True  # staying put never violates balance
+            new = state.argmax_tiebreak(scores, allowed)
+            state.part_of[v] = new
+            state.v_counts[new] += 1
+            state.e_counts[new] += d
+        part = state.part_of.copy()
+    if final_refine and k > 1:
+        part = refine_any(
+            graph, part, k, epsilon=epsilon, balance_mode=balance_mode,
+            seed=seed,
+        )
+    return part

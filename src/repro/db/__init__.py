@@ -1,0 +1,10 @@
+"""Distributed graph database engine (paper §IV-B, Table V).
+
+Batched one/two-hop neighbourhood retrieval over a partitioned graph with
+per-worker work and cross-partition RPC accounting - the JanusGraph/LDBC
+study's analogue.
+"""
+from repro.db.engine import QueryEngine, QueryStats
+from repro.db.workload import ldbc_query_mix
+
+__all__ = ["QueryEngine", "QueryStats", "ldbc_query_mix"]

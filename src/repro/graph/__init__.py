@@ -1,0 +1,28 @@
+"""Graph substrate: CSR structures, generators, streaming readers, metrics."""
+from repro.graph.csr import CSRGraph
+from repro.graph.generators import (
+    rmat_graph,
+    powerlaw_cluster_graph,
+    road_graph,
+    ldbc_like_graph,
+)
+from repro.graph.metrics import (
+    edge_cut,
+    communication_volume,
+    vertex_imbalance,
+    edge_imbalance,
+    quality_report,
+)
+
+__all__ = [
+    "CSRGraph",
+    "rmat_graph",
+    "powerlaw_cluster_graph",
+    "road_graph",
+    "ldbc_like_graph",
+    "edge_cut",
+    "communication_volume",
+    "vertex_imbalance",
+    "edge_imbalance",
+    "quality_report",
+]

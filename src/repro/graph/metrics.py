@@ -1,0 +1,79 @@
+"""Partition quality metrics (paper §II).
+
+All metrics take the graph and an assignment array ``part`` of shape [|V|]
+with values in [0, K).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.graph.csr import CSRGraph
+
+
+def _edge_endpoints(graph: CSRGraph) -> tuple[np.ndarray, np.ndarray]:
+    src = np.repeat(np.arange(graph.num_vertices, dtype=np.int64), graph.degrees)
+    return src, graph.indices.astype(np.int64)
+
+
+def edge_cut(graph: CSRGraph, part: np.ndarray) -> float:
+    """Normalized edge-cut  λ_EC  (paper Eq. 3), in [0, 1]."""
+    src, dst = _edge_endpoints(graph)
+    cut = int((part[src] != part[dst]).sum()) // 2  # symmetric storage
+    return cut / max(graph.num_edges, 1)
+
+
+def communication_volume(graph: CSRGraph, part: np.ndarray, k: int) -> float:
+    """Normalized communication volume  λ_CV  (paper Eq. 4).
+
+    D(u) = number of *other* partitions in which u has a neighbour;
+    λ_CV = Σ_u D(u) / (K |V|).
+    """
+    src, dst = _edge_endpoints(graph)
+    pd = part[dst].astype(np.int64)
+    # unique (u, neighbour-partition) pairs, excluding u's own partition
+    key = src * np.int64(k) + pd
+    uniq = np.unique(key)
+    u = uniq // k
+    p = uniq % k
+    external = int((p != part[u]).sum())
+    return external / (k * max(graph.num_vertices, 1))
+
+
+def partition_vertex_counts(part: np.ndarray, k: int) -> np.ndarray:
+    return np.bincount(part, minlength=k)
+
+
+def partition_edge_counts(graph: CSRGraph, part: np.ndarray, k: int) -> np.ndarray:
+    """Σ_{v∈V_i} |N(v)| per partition (degree mass, paper Eq. 2 LHS)."""
+    return np.bincount(part, weights=graph.degrees.astype(np.float64), minlength=k)
+
+
+def vertex_imbalance(part: np.ndarray, k: int) -> float:
+    counts = partition_vertex_counts(part, k)
+    return float(counts.max() / max(counts.mean(), 1e-12))
+
+
+def edge_imbalance(graph: CSRGraph, part: np.ndarray, k: int) -> float:
+    """max_i Σ_{v∈V_i}|N(v)| over its mean - Fig. 7's straggler metric."""
+    counts = partition_edge_counts(graph, part, k)
+    return float(counts.max() / max(counts.mean(), 1e-12))
+
+
+def quality_report(graph: CSRGraph, part: np.ndarray, k: int) -> dict:
+    part = np.asarray(part)
+    assert part.shape == (graph.num_vertices,)
+    assert part.min() >= 0 and part.max() < k, "invalid partition ids"
+    return {
+        "k": k,
+        "edge_cut": edge_cut(graph, part),
+        "comm_volume": communication_volume(graph, part, k),
+        "vertex_imbalance": vertex_imbalance(part, k),
+        "edge_imbalance": edge_imbalance(graph, part, k),
+    }
+
+
+def check_balance(
+    sizes: np.ndarray, total: float, k: int, epsilon: float
+) -> bool:
+    """Balance condition (paper Eq. 1 / Eq. 2): max_i size_i <= (1+eps) total/K."""
+    return bool(sizes.max() <= (1.0 + epsilon) * total / k + 1e-9)

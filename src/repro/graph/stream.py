@@ -1,0 +1,56 @@
+"""Vertex-stream abstraction (paper §II, "general streaming model").
+
+A stream yields ``(vertex_id, neighbor_array)`` exactly once per vertex; the
+partitioner may not look ahead. Supports the orderings the streaming
+literature studies (natural / random / BFS / DFS) since CUTTANA's headline
+property is robustness to input order.
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+import numpy as np
+
+from repro.graph.csr import CSRGraph
+
+
+def stream_order(graph: CSRGraph, order: str = "natural", seed: int = 0) -> np.ndarray:
+    n = graph.num_vertices
+    if order == "natural":
+        return np.arange(n, dtype=np.int64)
+    if order == "random":
+        rng = np.random.default_rng(seed)
+        return rng.permutation(n).astype(np.int64)
+    if order in ("bfs", "dfs"):
+        return _traversal_order(graph, dfs=(order == "dfs"), seed=seed)
+    raise ValueError(f"unknown stream order: {order}")
+
+
+def _traversal_order(graph: CSRGraph, dfs: bool, seed: int) -> np.ndarray:
+    n = graph.num_vertices
+    rng = np.random.default_rng(seed)
+    visited = np.zeros(n, dtype=bool)
+    out = np.empty(n, dtype=np.int64)
+    pos = 0
+    roots = rng.permutation(n)
+    for root in roots:
+        if visited[root]:
+            continue
+        stack = [int(root)]
+        visited[root] = True
+        while stack:
+            v = stack.pop() if dfs else stack.pop(0)
+            out[pos] = v
+            pos += 1
+            for u in graph.neighbors(v):
+                if not visited[u]:
+                    visited[u] = True
+                    stack.append(int(u))
+    return out
+
+
+def vertex_stream(
+    graph: CSRGraph, order: str = "natural", seed: int = 0
+) -> Iterator[tuple[int, np.ndarray]]:
+    for v in stream_order(graph, order, seed):
+        yield int(v), graph.neighbors(int(v))

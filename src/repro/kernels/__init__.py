@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel package ships three modules:
+  * ``<name>.py`` - the pl.pallas_call with explicit BlockSpec VMEM tiling
+                    (TPU is the target; validated with interpret=True on CPU),
+  * ``ops.py``    - the jit'd public wrapper (falls back to the reference
+                    implementation off-TPU),
+  * ``ref.py``    - the pure-jnp oracle.
+
+Kernels:
+  * partition_score - CUTTANA/FENNEL scoring hot-spot (Eq. 7): fused
+    neighbour-partition histogram + balance penalty over a vertex batch
+    (the paper's O(K|V|+|E|) streaming inner loop, re-tiled for the VPU).
+  * ell_spmv        - the analytics engine's gather/reduce over ELL-packed
+    adjacency (PageRank/CC/SSSP inner loop).
+  * flash_attention - online-softmax attention for LM prefill (causal /
+    bidirectional / sliding-window).
+  * mamba_scan      - fused selective-scan recurrence for Mamba blocks.
+"""

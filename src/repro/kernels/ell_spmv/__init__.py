@@ -1,0 +1,3 @@
+from repro.kernels.ell_spmv.ops import ell_spmv
+
+__all__ = ["ell_spmv"]

@@ -1,0 +1,54 @@
+"""Pallas TPU kernel: ELL-format sparse gather/reduce.
+
+The analytics engine's inner loop is ``out[r] = reduce_d x(cols[r, d])`` over
+a row-padded (ELL) adjacency. The GPU way is scatter-add over a COO stream;
+TPUs have no efficient scatter, so the hardware adaptation is: pack rows to a
+fixed width, keep the *entire* source vector resident in VMEM (vertex states
+are O(|V_local|) floats - a few MB per device shard, well within VMEM), and
+let each grid step gather for a tile of rows. No atomics, no scatter; the
+reduction happens along the minor axis in registers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmv_kernel(x_ref, cols_ref, out_ref, *, reduce):
+    x = x_ref[...]  # [1, Vp]   entire padded source vector
+    cols = cols_ref[...]  # [BR, D]
+    vals = x[0, cols.reshape(-1)].reshape(cols.shape)
+    if reduce == "sum":
+        out_ref[...] = vals.sum(axis=1, keepdims=True)
+    else:
+        out_ref[...] = vals.min(axis=1, keepdims=True)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("reduce", "block_r", "interpret")
+)
+def ell_spmv_pallas(
+    x: jnp.ndarray,  # float32[Vp]  (padded; identity slot included)
+    cols: jnp.ndarray,  # int32[R, D]  (R % block_r == 0)
+    reduce: str = "sum",
+    block_r: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    r, d = cols.shape
+    assert r % block_r == 0
+    kernel = functools.partial(_spmv_kernel, reduce=reduce)
+    out = pl.pallas_call(
+        kernel,
+        grid=(r // block_r,),
+        in_specs=[
+            pl.BlockSpec((1, x.shape[0]), lambda i: (0, 0)),
+            pl.BlockSpec((block_r, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, 1), x.dtype),
+        interpret=interpret,
+    )(x[None, :], cols)
+    return out[:, 0]

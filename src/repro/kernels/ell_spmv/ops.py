@@ -1,0 +1,33 @@
+"""Public wrapper for the ELL gather/reduce."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ell_spmv.ell_spmv import ell_spmv_pallas
+from repro.kernels.ell_spmv.ref import ell_spmv_ref
+
+
+def ell_spmv(
+    x,  # float[V + 1] source states incl. identity pad slot at index V
+    cols,  # int[R, D] ELL column indices (pad -> V)
+    reduce: str = "sum",
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+):
+    x = jnp.asarray(x)
+    cols = jnp.asarray(cols, jnp.int32)
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas and not interpret:
+        return ell_spmv_ref(x, cols, reduce)
+    r, d = cols.shape
+    block_r = 128 if r >= 128 else 8
+    rp = int(np.ceil(r / block_r)) * block_r
+    pad_col = x.shape[0] - 1
+    cols_p = jnp.full((rp, d), pad_col, jnp.int32).at[:r].set(cols)
+    out = ell_spmv_pallas(
+        x, cols_p, reduce=reduce, block_r=block_r, interpret=interpret
+    )
+    return out[:r]

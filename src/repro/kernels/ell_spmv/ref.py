@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the ELL gather/reduce (analytics inner loop)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ell_spmv_ref(
+    x: jnp.ndarray,  # float32[V + 1]; x[V] is the identity pad slot
+    cols: jnp.ndarray,  # int32[R, D]; pad entries point at slot V
+    reduce: str = "sum",
+) -> jnp.ndarray:
+    """out[r] = reduce_d x[cols[r, d]] - one vertex-program gather step."""
+    vals = x[cols]
+    if reduce == "sum":
+        return vals.sum(axis=1)
+    return vals.min(axis=1)

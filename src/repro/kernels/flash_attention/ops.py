@@ -1,0 +1,46 @@
+"""Public attention wrapper: GQA folding, padding, kernel/ref dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def flash_attention(
+    q,  # [B, Hq, Tq, Dh]
+    k,  # [B, Hkv, Tk, Dh]
+    v,  # [B, Hkv, Tk, Dh]
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+    block_q: int = 128,
+    block_k: int = 128,
+):
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas and not interpret:
+        return attention_ref(q, k, v, causal=causal, window=window, q_offset=q_offset)
+    b, hq, tq, dh = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    # fold GQA groups into the kv-head axis: each kv head serves g q-heads
+    qf = q.reshape(b, hkv, g, tq, dh).reshape(b * hkv * g, tq, dh)
+    kf = jnp.repeat(k.reshape(b * hkv, -1, dh), g, axis=0)
+    vf = jnp.repeat(v.reshape(b * hkv, -1, dh), g, axis=0)
+    bq = min(block_q, max(8, 1 << int(np.ceil(np.log2(max(tq, 1))))))
+    tq_p = int(np.ceil(tq / bq)) * bq
+    if tq_p != tq:
+        qf = jnp.pad(qf, ((0, 0), (0, tq_p - tq), (0, 0)))
+    out = flash_attention_pallas(
+        qf, kf, vf,
+        causal=causal, window=window, q_offset=q_offset,
+        block_q=bq, block_k=min(block_k, kf.shape[1]),
+        interpret=interpret,
+    )
+    out = out[:, :tq]
+    return out.reshape(b, hq, tq, dh)

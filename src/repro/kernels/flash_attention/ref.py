@@ -1,0 +1,35 @@
+"""Pure-jnp oracle: exact softmax attention with causal / sliding-window
+masking, fp32 accumulation."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,  # [B, Hq, Tq, Dh]
+    k: jnp.ndarray,  # [B, Hkv, Tk, Dh]
+    v: jnp.ndarray,  # [B, Hkv, Tk, Dh]
+    causal: bool = True,
+    window: int | None = None,  # sliding window size (None = full)
+    q_offset: int = 0,  # absolute position of q[0] (decode: Tk - Tq)
+) -> jnp.ndarray:
+    b, hq, tq, dh = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    qf = q.astype(jnp.float32) * (dh**-0.5)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    qg = qf.reshape(b, hkv, g, tq, dh)
+    scores = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kf)
+    qpos = jnp.arange(tq)[:, None] + q_offset
+    kpos = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((tq, k.shape[2]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, vf)
+    return out.reshape(b, hq, tq, dh).astype(q.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.mamba_scan.ops import selective_scan
+
+__all__ = ["selective_scan"]

@@ -1,0 +1,29 @@
+"""Public wrapper for the fused selective scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.mamba_scan.mamba_scan import selective_scan_pallas
+from repro.kernels.mamba_scan.ref import selective_scan_ref
+
+
+def selective_scan(
+    x, dt, a, b, c, d_skip,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+    block_d: int = 512,
+):
+    """Returns (y[B,T,D], h_T[B,D,N])."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas and not interpret:
+        return selective_scan_ref(x, dt, a, b, c, d_skip)
+    d = x.shape[-1]
+    bd = min(block_d, d)
+    while d % bd:
+        bd //= 2
+    return selective_scan_pallas(
+        x, dt, a, b, c, d_skip, block_d=max(bd, 1), interpret=interpret
+    )

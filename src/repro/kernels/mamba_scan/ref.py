@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the Mamba-1 selective scan.
+
+    h_t = exp(dt_t * A) * h_{t-1} + (dt_t * x_t) * B_t      h: [D, N]
+    y_t = (h_t @ C_t) + D_skip * x_t                        y: [D]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(
+    x: jnp.ndarray,  # [B, T, D]
+    dt: jnp.ndarray,  # [B, T, D]   (already softplus'd)
+    a: jnp.ndarray,  # [D, N]      (negative; state decay)
+    b: jnp.ndarray,  # [B, T, N]
+    c: jnp.ndarray,  # [B, T, N]
+    d_skip: jnp.ndarray,  # [D]
+    h0: jnp.ndarray | None = None,  # [B, D, N] initial state
+):
+    bsz, t, d = x.shape
+    n = a.shape[1]
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+
+    def scan_one(h, inp):
+        xt, dtt, bt, ct = inp  # [D], [D], [N], [N]
+        da = jnp.exp(dtt[:, None] * af)  # [D, N]
+        h = da * h + (dtt * xt)[:, None] * bt[None, :]
+        y = (h * ct[None, :]).sum(-1)  # [D]
+        return h, y
+
+    def per_batch(xb, dtb, bb, cb, h0b):
+        h, ys = jax.lax.scan(scan_one, h0b, (xb, dtb, bb, cb))
+        return h, ys
+
+    h0 = (
+        jnp.zeros((bsz, d, n), jnp.float32)
+        if h0 is None
+        else h0.astype(jnp.float32)
+    )
+    hT, ys = jax.vmap(per_batch)(xf, dtf, bf, cf, h0)
+    y = ys + xf * d_skip.astype(jnp.float32)[None, None, :]
+    return y.astype(x.dtype), hT

@@ -1,0 +1,3 @@
+from repro.kernels.partition_score.ops import fennel_scores
+
+__all__ = ["fennel_scores"]

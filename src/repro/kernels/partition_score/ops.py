@@ -1,0 +1,44 @@
+"""Public wrapper: pads to kernel-friendly shapes, dispatches kernel vs ref."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.partition_score.partition_score import fennel_scores_pallas
+from repro.kernels.partition_score.ref import fennel_scores_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def fennel_scores(
+    nbr_parts,
+    sizes,
+    alpha: float,
+    gamma: float = 1.5,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+):
+    """scores[B, K] for a batch of vertices (Eq. 7 affinity + penalty).
+
+    ``nbr_parts`` int[B, D] (-1 padding), ``sizes`` float[K].
+    """
+    nbr_parts = jnp.asarray(nbr_parts, jnp.int32)
+    sizes = jnp.asarray(sizes, jnp.float32)
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if not use_pallas and not interpret:
+        return fennel_scores_ref(nbr_parts, sizes, alpha, gamma)
+    b, d = nbr_parts.shape
+    block_b = 128 if b >= 128 else 8
+    d_chunk = 128 if d >= 128 else max(8, d)
+    bp = int(np.ceil(b / block_b)) * block_b
+    dp = int(np.ceil(d / d_chunk)) * d_chunk
+    padded = jnp.full((bp, dp), -1, jnp.int32).at[:b, :d].set(nbr_parts)
+    out = fennel_scores_pallas(
+        padded, sizes, alpha, gamma,
+        block_b=block_b, d_chunk=d_chunk, interpret=interpret,
+    )
+    return out[:b]

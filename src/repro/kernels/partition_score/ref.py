@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the fused FENNEL scoring kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fennel_scores_ref(
+    nbr_parts: jnp.ndarray,  # int32[B, D] neighbour partition ids, -1 = pad
+    sizes: jnp.ndarray,  # float32[K] partition sizes (active balance metric)
+    alpha: float,
+    gamma: float,
+) -> jnp.ndarray:
+    """scores[B, K] = |V_k ∩ N(v_b)| - alpha*gamma*sizes_k^(gamma-1)."""
+    k = sizes.shape[0]
+    onehot = nbr_parts[..., None] == jnp.arange(k, dtype=nbr_parts.dtype)
+    hist = onehot.sum(axis=1).astype(jnp.float32)  # [B, K]
+    penalty = alpha * gamma * jnp.power(jnp.maximum(sizes, 0.0), gamma - 1.0)
+    return hist - penalty[None, :]

@@ -1,0 +1,243 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, print memory/cost analysis, and dump the roofline
+inputs (FLOPs / bytes / collective traffic) as JSON.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b \
+        --shape train_4k [--multi-pod] [--out runs/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all   # full matrix
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALIASES, SHAPES, cells_for, get_config
+from repro.launch.hlo_analysis import analyze
+from repro.launch.mesh import make_production_mesh, mesh_axes
+from repro.launch.specs import (
+    analytic_model_flops,
+    batch_specs,
+    pick_accum,
+    sds,
+    sds_tree,
+)
+from repro.models import Axes, Model
+from repro.train.optimizer import adamw_init, adamw_state_specs
+from repro.train.step import make_decode_step, make_prefill_step, make_train_step
+
+# v5e hardware constants for the roofline (per chip)
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9
+ICI_BW = 50e9  # per link
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               overrides: dict | None = None):
+    import dataclasses
+
+    cfg = get_config(arch)
+    force_accum = None
+    if overrides:
+        overrides = dict(overrides)
+        force_accum = overrides.pop("accum", None)
+        cfg = dataclasses.replace(cfg, **overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp, tp = mesh_axes(multi_pod)
+    ax = Axes(dp=dp, tp=tp)
+    model = Model(cfg, ax, mesh)
+    shape = SHAPES[shape_name]
+    kind = shape["kind"]
+    n_dp = 1
+    for a in dp:
+        n_dp *= int(mesh.shape[a])
+
+    param_sds = sds_tree(model.init_shapes(), model.param_specs(), mesh)
+    meta = {"accum": 1}
+    with jax.set_mesh(mesh):  # with_sharding_constraint needs an ambient mesh
+        if kind == "train":
+            n_tp = int(mesh.shape[tp]) if cfg.activation_partitioning == "seq" else 1
+            accum = int(force_accum) if force_accum else pick_accum(
+                cfg, shape, n_dp, n_tp=n_tp
+            )
+            meta["accum"] = accum
+            opt_shapes = jax.eval_shape(
+                lambda p: adamw_init(p, jnp.dtype(cfg.opt_state_dtype)), param_sds
+            )
+            opt_sds = sds_tree(opt_shapes, adamw_state_specs(model.param_specs()), mesh)
+            batch = batch_specs(cfg, shape, mesh, dp, accum=accum)
+            step = make_train_step(model, accum=accum)
+            lowered = jax.jit(step).lower(param_sds, opt_sds, batch)
+        elif kind == "prefill":
+            batch = batch_specs(cfg, shape, mesh, dp)
+            step = make_prefill_step(model)
+            lowered = jax.jit(step).lower(param_sds, batch)
+        else:  # decode
+            b, s = shape["global_batch"], shape["seq_len"]
+            cache_shapes = jax.eval_shape(
+                lambda: model.init_cache(b, s)
+            )
+            cache_sds = sds_tree(cache_shapes, model.cache_specs(), mesh)
+            tokens = sds((b, 1), jnp.int32, jax.sharding.PartitionSpec(dp, None), mesh)
+            pos = sds((), jnp.int32, jax.sharding.PartitionSpec(), mesh)
+            step = make_decode_step(model)
+            lowered = jax.jit(step).lower(param_sds, cache_sds, tokens, pos)
+    return lowered, mesh, meta
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             overrides: dict | None = None) -> dict:
+    t0 = time.time()
+    cfg = get_config(arch)
+    cells = cells_for(arch, cfg)
+    status = cells[shape_name]
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": status,
+    }
+    if status != "run":
+        return result
+    kind = SHAPES[shape_name]["kind"]
+    if overrides:
+        result["overrides"] = {k: str(v) for k, v in overrides.items()}
+    try:
+        lowered, mesh, meta = lower_cell(arch, shape_name, multi_pod, overrides)
+        t_lower = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time()
+        chips = mesh.devices.size
+        try:
+            mem = compiled.memory_analysis()
+            mem_info = {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+                "generated_code_bytes": getattr(
+                    mem, "generated_code_size_in_bytes", None
+                ),
+            }
+        except Exception as e:  # pragma: no cover
+            mem_info = {"error": str(e)}
+        try:
+            ca = compiled.cost_analysis()
+            cost = {
+                "xla_flops_body_once": ca.get("flops"),
+                "xla_bytes_body_once": ca.get("bytes accessed"),
+            }
+        except Exception as e:  # pragma: no cover
+            cost = {"error": str(e)}
+        hlo = compiled.as_text()
+        h = analyze(hlo)
+        model_fl = analytic_model_flops(cfg, SHAPES[shape_name], kind)
+        # accumulate microbatching multiplies tokens back up via trip counts
+        dot_total = h["dot_flops_per_shard"] * chips
+        result.update(
+            status="ok",
+            chips=chips,
+            accum=meta["accum"],
+            lower_s=round(t_lower - t0, 1),
+            compile_s=round(t_compile - t_lower, 1),
+            memory=mem_info,
+            cost=cost,
+            dot_flops_per_shard=h["dot_flops_per_shard"],
+            dot_flops_total=dot_total,
+            collective_bytes_per_shard=h["collective_bytes"],
+            collective_counts=h["collective_counts"],
+            total_collective_bytes_per_shard=h["total_collective_bytes"],
+            max_trip_count=h["max_trip_count"],
+            **model_fl,
+        )
+        # --- roofline terms (seconds), single-chip denominators x chips
+        compute_s = dot_total / (chips * PEAK_FLOPS)
+        mem_bytes = cost.get("xla_bytes_body_once") or 0.0
+        trip = max(h["max_trip_count"], 1.0)
+        # bytes: body-once count is a lower bound; scale the dominant scan
+        mem_s = mem_bytes * trip / (chips * HBM_BW) if mem_bytes else None
+        coll_s = h["total_collective_bytes"] / ICI_BW
+        result["roofline"] = {
+            "compute_s": compute_s,
+            "memory_s_upper": mem_s,
+            "collective_s": coll_s,
+            "model_flops_ratio": (
+                model_fl["model_flops"] / dot_total if dot_total else None
+            ),
+        }
+    except Exception as e:
+        result.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+    result["wall_s"] = round(time.time() - t0, 1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="runs/dryrun")
+    ap.add_argument("--opt", default=None,
+                    help="comma-separated cfg overrides, e.g. "
+                         "activation_partitioning=seq,opt_state_dtype=bfloat16")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cells = []
+    if args.all:
+        for arch in ALIASES:
+            for shape in SHAPES:
+                for mp in (False, True):
+                    cells.append((arch, shape, mp))
+    else:
+        assert args.arch and args.shape
+        cells.append((args.arch, args.shape, args.multi_pod))
+
+    overrides = None
+    if args.opt:
+        overrides = {}
+        for kv in args.opt.split(","):
+            k, v = kv.split("=")
+            if v.isdigit():
+                overrides[k] = int(v)
+            else:
+                try:
+                    overrides[k] = float(v)
+                except ValueError:
+                    overrides[k] = v
+    for arch, shape, mp in cells:
+        tag = f"{ALIASES.get(arch, arch)}_{shape}_{'multi' if mp else 'single'}"
+        if args.tag:
+            tag += f"_{args.tag}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path):
+            print(f"[skip cached] {tag}")
+            continue
+        print(f"[run] {tag}", flush=True)
+        res = run_cell(arch, shape, mp, overrides)
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+        print(
+            f"  -> {res['status']}"
+            + (
+                f" compile={res.get('compile_s')}s"
+                f" dotTFLOP={res.get('dot_flops_total', 0)/1e12:.1f}"
+                f" coll/shard={res.get('total_collective_bytes_per_shard', 0)/1e6:.0f}MB"
+                if res["status"] == "ok"
+                else f" {res.get('error', '')[:200]}"
+            ),
+            flush=True,
+        )
+
+
+if __name__ == "__main__":
+    main()

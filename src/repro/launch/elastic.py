@@ -1,0 +1,51 @@
+"""Elastic re-meshing demo: train on mesh A, crash, resume on mesh B.
+
+Checkpoints store host arrays (mesh-agnostic), so resuming on a different
+device count only changes the NamedShardings applied at device_put. This is
+the recovery path when a pod (or slice) is lost: re-mesh to the surviving
+slice, restore, continue.
+
+    PYTHONPATH=src python -m repro.launch.elastic --ckpt-dir /tmp/elastic
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+
+from repro.launch import train as train_mod
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--steps", type=int, default=30)
+    args = ap.parse_args(argv)
+    ckpt = args.ckpt_dir or tempfile.mkdtemp(prefix="elastic_")
+
+    half = args.steps // 2
+    print(f"[elastic] phase 1: mesh 1x1 for {half} steps")
+    try:
+        train_mod.main([
+            "--arch", "repro-100m", "--steps", str(args.steps),
+            "--global-batch", "8", "--seq-len", "128",
+            "--mesh", "1x1", "--ckpt-dir", ckpt,
+            "--ckpt-every", "10", "--fail-at", str(half),
+        ])
+    except RuntimeError as e:
+        print(f"[elastic] caught: {e}")
+
+    n = len(__import__("jax").devices())
+    mesh2 = "1x2" if n >= 2 else "1x1"
+    print(f"[elastic] phase 2: resume on mesh {mesh2} (survivors)")
+    loss = train_mod.main([
+        "--arch", "repro-100m", "--steps", str(args.steps),
+        "--global-batch", "8", "--seq-len", "128",
+        "--mesh", mesh2, "--ckpt-dir", ckpt, "--ckpt-every", "10",
+    ])
+    print(f"[elastic] recovered and finished; final loss {loss:.4f}")
+    return loss
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Production meshes. A FUNCTION (not a module-level constant) so importing
+this module never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_axes(multi_pod: bool):
+    """(fsdp/data axes tuple, tp axis) for the production meshes."""
+    return (("pod", "data") if multi_pod else ("data",)), "model"
+
+
+def make_debug_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many local devices exist (tests)."""
+    import numpy as np
+
+    devs = np.array(jax.devices()[: data * model]).reshape(data, model)
+    from jax.sharding import Mesh
+
+    return Mesh(devs, ("data", "model"))

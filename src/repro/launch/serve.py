@@ -1,0 +1,88 @@
+"""Batched serving driver: prefill + decode loop with continuous batching.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch reduced:qwen3-8b \
+        --batch 4 --prompt-len 32 --gen 16
+
+Serves a (reduced) model on the local mesh: runs a real prefill to populate
+the KV/state caches, then a jitted decode loop with greedy sampling. This is
+the end-to-end example for the inference side; the dry-run lowers the same
+decode_step at production shapes.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.train import build_mesh, get_model_config
+from repro.models import Axes, Model
+
+
+def prefill_into_cache(model: Model, params, cache, tokens):
+    """Sequential prefill via decode steps (correct for every mixer type;
+    production prefill uses the chunked forward + cache write kernels)."""
+    b, t = tokens.shape
+    logits = None
+    for pos in range(t):
+        logits, cache = model.decode_step(
+            params, cache, tokens[:, pos : pos + 1], jnp.int32(pos)
+        )
+    return logits, cache
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="reduced:qwen3-8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--mesh", default="1x1")
+    args = ap.parse_args(argv)
+
+    cfg = get_model_config(args.arch)
+    if cfg.is_encoder_only:
+        raise SystemExit("encoder-only arch has no decode path")
+    mesh = build_mesh(args.mesh)
+    dp = ("data",) if "pod" not in mesh.axis_names else ("pod", "data")
+    model = Model(cfg, Axes(dp=dp, tp="model"), mesh)
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(2, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32
+    )
+    max_len = args.prompt_len + args.gen
+
+    with jax.set_mesh(mesh):
+        params = model.init(jax.random.key(0))
+        cache = model.init_cache(args.batch, max_len)
+        t0 = time.time()
+        logits, cache = prefill_into_cache(model, params, cache, prompts)
+        t_prefill = time.time() - t0
+
+        decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        out = [tok]
+        t0 = time.time()
+        for i in range(args.gen - 1):
+            pos = jnp.int32(args.prompt_len + i)
+            logits, cache = decode(params, cache, tok, pos)
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+            out.append(tok)
+        jax.block_until_ready(tok)
+        t_decode = time.time() - t0
+    gen = np.concatenate([np.asarray(t) for t in out], axis=1)
+    print("generated token ids:\n", gen)
+    print(
+        f"prefill {args.prompt_len} tok x{args.batch}: {t_prefill:.2f}s; "
+        f"decode: {args.gen - 1} steps in {t_decode:.2f}s "
+        f"({args.batch * (args.gen - 1) / max(t_decode, 1e-9):.1f} tok/s)"
+    )
+    return gen
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,121 @@
+"""ShapeDtypeStruct builders for the dry-run: weak-type-correct, shardable,
+zero allocation. Includes divisibility sanitization (a dim that does not
+divide its mesh axes falls back to replicated - e.g. hubert's vocab of 504
+on a 16-way model axis) and the analytic MODEL_FLOPS used by the roofline.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def sanitize_spec(shape, spec: P, mesh: Mesh) -> P:
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = math.prod(int(mesh.shape[a]) for a in axes)
+        if i < len(shape) and shape[i] % size == 0:
+            out.append(entry)
+        else:
+            out.append(None)
+    # pad missing dims with None
+    while len(out) < len(shape):
+        out.append(None)
+    return P(*out)
+
+
+def sds(shape, dtype, spec: P, mesh: Mesh) -> jax.ShapeDtypeStruct:
+    spec = sanitize_spec(shape, spec, mesh)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def sds_tree(shapes_tree, specs_tree, mesh: Mesh):
+    def one(s, p):
+        return sds(s.shape, s.dtype, p, mesh)
+
+    return jax.tree.map(
+        one, shapes_tree, specs_tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def batch_specs(cfg: ModelConfig, shape: dict, mesh: Mesh, dp, accum: int = 1):
+    """Training/prefill batch ShapeDtypeStructs. ``shape``: SHAPES[name]."""
+    b, s = shape["global_batch"], shape["seq_len"]
+    out = {}
+    lead = (accum, b // accum) if accum > 1 else (b,)
+    lead_spec = (None, dp) if accum > 1 else (dp,)
+    if cfg.frontend == "frames":
+        out["frames"] = sds(
+            (*lead, s, cfg.d_model), jnp.bfloat16, P(*lead_spec, None, None), mesh
+        )
+    else:
+        out["tokens"] = sds((*lead, s), jnp.int32, P(*lead_spec, None), mesh)
+    out["labels"] = sds((*lead, s), jnp.int32, P(*lead_spec, None), mesh)
+    if cfg.n_img_tokens:
+        out["image_embeds"] = sds(
+            (*lead, cfg.n_img_tokens, cfg.d_model),
+            jnp.bfloat16,
+            P(*lead_spec, None, None),
+            mesh,
+        )
+    return out
+
+
+def pick_accum(cfg: ModelConfig, shape: dict, n_dp: int,
+               target_bytes: float = 2.5e9, n_tp: int = 1) -> int:
+    """Gradient-accumulation factor keeping the scan-carry activation
+    footprint (microbatch x seq x d_model x 2B x n_blocks per device) under
+    ``target_bytes``. Sequence-parallel activations divide the footprint by
+    the TP size (pass n_tp)."""
+    b, s = shape["global_batch"], shape["seq_len"]
+    per_dev = max(b // n_dp, 1)
+    accum = 1
+    while accum < per_dev:
+        mb = per_dev / accum
+        footprint = mb * s * cfg.d_model * 2 * max(cfg.n_blocks, 1) / max(n_tp, 1)
+        if footprint <= target_bytes:
+            break
+        accum *= 2
+    # accum must divide the global batch and keep microbatch % n_dp == 0
+    while accum > 1 and (b % accum or (b // accum) % n_dp):
+        accum //= 2
+    return accum
+
+
+def analytic_model_flops(cfg: ModelConfig, shape: dict, kind: str) -> dict:
+    """MODEL_FLOPS: 6*N*D (train) / 2*N*D (inference) with N = active params,
+    plus attention-score FLOPs (which param counts miss)."""
+    b, s = shape["global_batch"], shape["seq_len"]
+    n_active = cfg.active_param_count()
+    dh = cfg.head_dim
+    att = 0.0
+    for spec in cfg.layers():
+        if spec.mixer == "attn":
+            eff = min(spec.window, s) if spec.window else s
+            if kind == "decode":
+                # one token attends over the cache
+                att += 2 * 2 * b * cfg.n_heads * dh * eff
+            else:
+                avg_ctx = eff / 2 if spec.window is None else eff
+                att += 2 * 2 * b * s * cfg.n_heads * dh * avg_ctx
+        elif spec.mixer == "cross_attn":
+            tq = 1 if kind == "decode" else s
+            att += 2 * 2 * b * tq * cfg.n_heads * dh * cfg.n_img_tokens
+    if kind == "train":
+        tokens = b * s
+        flops = 6.0 * n_active * tokens + 3.0 * att
+    elif kind == "prefill":
+        tokens = b * s
+        flops = 2.0 * n_active * tokens + att
+    else:  # decode: one token per sequence
+        tokens = b
+        flops = 2.0 * n_active * tokens + att
+    return {"model_flops": flops, "tokens": tokens, "active_params": n_active}

@@ -1,0 +1,158 @@
+"""End-to-end training driver with fault tolerance.
+
+    PYTHONPATH=src python -m repro.launch.train --arch repro-100m --steps 200
+
+Features exercised even at CPU smoke scale:
+  * sharded params/optimizer via NamedSharding (any mesh),
+  * jitted train_step with donated state,
+  * async atomic checkpoints every --ckpt-every steps, keep-N,
+  * crash-restart: --fail-at N raises mid-run; rerunning with the same
+    --ckpt-dir resumes from the latest checkpoint (data pipeline included),
+  * elastic re-mesh: checkpoints are host arrays, so a restart may use a
+    different mesh/device count (see launch/elastic.py).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ALIASES, get_config, get_reduced_config
+from repro.models import Axes, Model
+from repro.models.config import LayerSpec, ModelConfig
+from repro.train.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
+from repro.train.data import TokenPipeline
+from repro.train.optimizer import adamw_init, adamw_state_specs
+from repro.train.step import make_train_step
+
+
+def repro_100m() -> ModelConfig:
+    """~100M-param llama-style model for the end-to-end example."""
+    return ModelConfig(
+        name="repro-100m",
+        family="dense",
+        d_model=640,
+        vocab_size=32768,
+        block=(LayerSpec("attn", "dense"),),
+        n_blocks=10,
+        n_heads=10,
+        n_kv_heads=5,
+        d_ff=1792,
+        activation="swiglu",
+        remat=False,
+    )
+
+
+def build_mesh(spec: str) -> Mesh:
+    dims = [int(x) for x in spec.split("x")]
+    n = int(np.prod(dims))
+    devs = np.array(jax.devices()[:n]).reshape(dims)
+    names = ("data", "model") if len(dims) == 2 else ("pod", "data", "model")
+    return Mesh(devs, names)
+
+
+def get_model_config(name: str) -> ModelConfig:
+    if name == "repro-100m":
+        return repro_100m()
+    if name.startswith("reduced:"):
+        return get_reduced_config(name.split(":", 1)[1])
+    return get_config(name)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="repro-100m")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--mesh", default="1x1")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a crash after this step (fault-tolerance demo)")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_model_config(args.arch)
+    mesh = build_mesh(args.mesh)
+    dp = ("data",) if "pod" not in mesh.axis_names else ("pod", "data")
+    ax = Axes(dp=dp, tp="model")
+    model = Model(cfg, ax, mesh)
+    train_step = make_train_step(
+        model, peak_lr=args.lr, warmup=min(100, args.steps // 10 + 1),
+        total_steps=args.steps,
+    )
+
+    pspecs = model.param_specs()
+    with jax.set_mesh(mesh):
+        params = jax.jit(
+            model.init,
+            out_shardings=jax.tree.map(
+                lambda s: NamedSharding(mesh, s), pspecs,
+                is_leaf=lambda x: isinstance(x, P),
+            ),
+        )(jax.random.key(0))
+        opt_state = adamw_init(params, jnp.dtype(cfg.opt_state_dtype))
+
+    start_step = 0
+    ckpt = AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
+    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        (params_h, opt_h), start_step = restore_checkpoint(
+            args.ckpt_dir, (params, opt_state)
+        )
+        put = lambda tree, host: jax.tree.map(
+            lambda x, h: jax.device_put(jnp.asarray(h), x.sharding), tree, host
+        )
+        params = put(params, params_h)
+        opt_state = put(opt_state, opt_h)
+        print(f"[restore] resumed from step {start_step}")
+
+    pipe = TokenPipeline(
+        cfg.vocab_size, args.seq_len, args.global_batch, seed=1234
+    )
+    pipe.skip_to(start_step)
+    step_fn = jax.jit(train_step, donate_argnums=(0, 1))
+
+    t0 = time.time()
+    tokens_done = 0
+    with jax.set_mesh(mesh):
+        for step in range(start_step, args.steps):
+            batch = next(pipe)
+            batch = {
+                k: jax.device_put(v, NamedSharding(mesh, P(dp, None)))
+                for k, v in batch.items()
+            }
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            tokens_done += args.global_batch * args.seq_len
+            if (step + 1) % args.log_every == 0 or step + 1 == args.steps:
+                m = {k: float(v) for k, v in metrics.items()}
+                tps = tokens_done / max(time.time() - t0, 1e-9)
+                print(
+                    f"step {step+1:5d} loss={m['loss']:.4f} ce={m['ce']:.4f} "
+                    f"gnorm={m['grad_norm']:.3f} lr={m['lr']:.2e} tok/s={tps:,.0f}",
+                    flush=True,
+                )
+            if ckpt and (step + 1) % args.ckpt_every == 0:
+                ckpt.save(step + 1, (params, opt_state))
+            if args.fail_at is not None and step + 1 == args.fail_at:
+                if ckpt:
+                    ckpt.wait()
+                raise RuntimeError(
+                    f"[injected failure] node died at step {step+1}; "
+                    f"rerun with the same --ckpt-dir to resume"
+                )
+    if ckpt:
+        ckpt.save(args.steps, (params, opt_state))
+        ckpt.wait()
+    pipe.close()
+    print("[done]")
+    return float(metrics["loss"])
+
+
+if __name__ == "__main__":
+    main()

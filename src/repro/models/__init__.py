@@ -1,0 +1,5 @@
+from repro.models.config import LayerSpec, ModelConfig
+from repro.models.layers import Axes
+from repro.models.model import Model
+
+__all__ = ["LayerSpec", "ModelConfig", "Model", "Axes"]

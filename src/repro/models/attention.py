@@ -1,0 +1,359 @@
+"""Attention variants: GQA (qk-norm, sliding window), MLA, cross-attention.
+
+Three execution regimes:
+  * train / short prefill  - plain einsum attention (XLA fuses fine at 4k);
+  * long prefill (>= 8k)   - chunked online-softmax attention (lax.scan over
+    kv blocks; jnp mirror of the Pallas flash kernel, bounded memory);
+  * decode                 - the KV cache shards its *sequence* dim over the
+    TP axis ("model"); a shard_map flash-decode computes per-stripe partial
+    softmax and merges with pmax/psum. This sidesteps GQA head-count /
+    mesh-size divisibility entirely (heads stay whole, sequence splits) and
+    is what makes decode_32k / long_500k fit in HBM.
+
+MLA (DeepSeek-V2) caches only the compressed latent (c_kv + rope key) and
+decodes in the absorbed form - the paper-faithful memory win.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.layers import Axes, apply_rope, qk_head_norm, rms_norm
+
+CHUNKED_THRESHOLD = 8192
+
+
+# ------------------------------------------------------------------- params
+def init_attention(key, cfg, dtype, cross: bool = False) -> dict:
+    d = cfg.d_model
+    dh = cfg.head_dim
+    h, hkv = cfg.n_heads, cfg.n_kv_heads
+    s = d**-0.5
+    if cfg.use_mla and not cross:
+        keys = jax.random.split(key, 6)
+        qr = cfg.q_lora_rank
+        nope, rope_d, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+        p = {
+            "wkv_a": jax.random.normal(keys[0], (d, cfg.kv_lora_rank + rope_d), dtype) * s,
+            "kv_norm": jnp.ones((cfg.kv_lora_rank,), dtype),
+            "wkv_b": jax.random.normal(
+                keys[1], (cfg.kv_lora_rank, h * (nope + vd)), dtype
+            ) * (cfg.kv_lora_rank**-0.5),
+            "wo": jax.random.normal(keys[2], (h * vd, d), dtype) * ((h * vd) ** -0.5),
+        }
+        if qr:
+            p["wq_a"] = jax.random.normal(keys[3], (d, qr), dtype) * s
+            p["q_norm"] = jnp.ones((qr,), dtype)
+            p["wq_b"] = jax.random.normal(
+                keys[4], (qr, h * (nope + rope_d)), dtype
+            ) * (qr**-0.5)
+        else:
+            p["wq"] = jax.random.normal(keys[3], (d, h * (nope + rope_d)), dtype) * s
+        return p
+    keys = jax.random.split(key, 5)
+    p = {
+        "wq": jax.random.normal(keys[0], (d, h * dh), dtype) * s,
+        "wk": jax.random.normal(keys[1], (d, hkv * dh), dtype) * s,
+        "wv": jax.random.normal(keys[2], (d, hkv * dh), dtype) * s,
+        "wo": jax.random.normal(keys[3], (h * dh, d), dtype) * ((h * dh) ** -0.5),
+    }
+    if cfg.qk_norm:
+        p["q_scale"] = jnp.ones((dh,), dtype)
+        p["k_scale"] = jnp.ones((dh,), dtype)
+    if cross and cfg.cross_attn_gated:
+        p["gate"] = jnp.zeros((1,), dtype)
+    return p
+
+
+def specs_attention(cfg, ax: Axes, cross: bool = False) -> dict:
+    if cfg.use_mla and not cross:
+        p = {
+            "wkv_a": P(ax.dp, None),
+            "kv_norm": P(None),
+            "wkv_b": P(ax.dp, ax.tp),
+            "wo": P(ax.tp, ax.dp),
+        }
+        if cfg.q_lora_rank:
+            p["wq_a"] = P(ax.dp, None)
+            p["q_norm"] = P(None)
+            p["wq_b"] = P(ax.dp, ax.tp)
+        else:
+            p["wq"] = P(ax.dp, ax.tp)
+        return p
+    if getattr(cfg, "attn_weight_shard", "d") == "f" and not cross:
+        full = (*ax.dp, ax.tp)
+        p = {
+            "wq": P(None, full),
+            "wk": P(None, full),
+            "wv": P(None, full),
+            "wo": P(full, None),
+        }
+    else:
+        p = {
+            "wq": P(ax.dp, ax.tp),
+            "wk": P(ax.dp, ax.tp),
+            "wv": P(ax.dp, ax.tp),
+            "wo": P(ax.tp, ax.dp),
+        }
+    if cfg.qk_norm:
+        p["q_scale"] = P(None)
+        p["k_scale"] = P(None)
+    if cross and cfg.cross_attn_gated:
+        p["gate"] = P(None)
+    return p
+
+
+# ------------------------------------------------------------ full attention
+def _sdpa(q, k, v, causal, window, q_offset=0):
+    """q: [B,T,H,dh] k/v: [B,S,Hkv,dh] -> [B,T,H,dh] (fp32 softmax)."""
+    b, t, h, dh = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, t, hkv, g, dh).astype(jnp.float32) * (dh**-0.5)
+    scores = jnp.einsum("bthgd,bshd->bhgts", qg, k.astype(jnp.float32))
+    qpos = jnp.arange(t)[:, None] + q_offset
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((t, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgts,bshd->bthgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, t, h, v.shape[-1]).astype(q.dtype)  # v dim may != q dim (MLA)
+
+
+def _chunked_sdpa(q, k, v, causal, window, chunk=1024):
+    """Online-softmax over kv chunks (bounded memory for 32k+ prefill)."""
+    b, t, h, dh = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    assert s % chunk == 0, (s, chunk)
+    qg = q.reshape(b, t, hkv, g, dh).astype(jnp.float32) * (dh**-0.5)
+    kc = k.reshape(b, s // chunk, chunk, hkv, dh)
+    vc = v.reshape(b, s // chunk, chunk, hkv, v.shape[-1])
+    qpos = jnp.arange(t)[:, None]
+
+    def body(carry, inp):
+        m_prev, l_prev, acc = carry
+        ci, k_blk, v_blk = inp
+        scores = jnp.einsum(
+            "bthgd,bchd->bhgtc", qg, k_blk.astype(jnp.float32)
+        )
+        kpos = ci * chunk + jnp.arange(chunk)[None, :]
+        mask = jnp.ones((t, chunk), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+        m_cur = jnp.maximum(m_prev, scores.max(-1))
+        alpha = jnp.exp(m_prev - m_cur)
+        probs = jnp.exp(scores - m_cur[..., None])
+        l_cur = l_prev * alpha + probs.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgtc,bchd->bhgtd", probs, v_blk.astype(jnp.float32)
+        )
+        return (m_cur, l_cur, acc), None
+
+    vd = v.shape[-1]
+    m0 = jnp.full((b, hkv, g, t), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, t), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, t, vd), jnp.float32)
+    ks = jnp.moveaxis(kc, 1, 0)
+    vs = jnp.moveaxis(vc, 1, 0)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (jnp.arange(s // chunk), ks, vs)
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, -2, 1).reshape(b, t, h, vd)
+    return out.astype(q.dtype)
+
+
+def gqa_forward(x, p, cfg, window, kv_x=None, causal=None, seq_axes=None):
+    """Full-sequence attention (train / prefill). kv_x: cross-attn source.
+    seq_axes=(dp, tp): sequence-parallel mode - q keeps its seq dim sharded
+    over tp while K/V are all-gathered (cheap: Hkv*dh << H*dh)."""
+    b, t, d = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    src = x if kv_x is None else kv_x
+    q = (x @ p["wq"]).reshape(b, t, h, dh)
+    k = (src @ p["wk"]).reshape(b, src.shape[1], hkv, dh)
+    v = (src @ p["wv"]).reshape(b, src.shape[1], hkv, dh)
+    if seq_axes is not None:
+        dp_, tp_ = seq_axes
+        q = jax.lax.with_sharding_constraint(q, P(dp_, tp_, None, None))
+        k = jax.lax.with_sharding_constraint(k, P(dp_, None, None, None))
+        v = jax.lax.with_sharding_constraint(v, P(dp_, None, None, None))
+    if cfg.qk_norm:
+        q = qk_head_norm(q, p["q_scale"])
+        k = qk_head_norm(k, p["k_scale"])
+    is_causal = cfg.causal if causal is None else causal
+    if kv_x is None:  # self-attention gets RoPE
+        pos = jnp.arange(t)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+    s = src.shape[1]
+    if s >= CHUNKED_THRESHOLD:
+        out = _chunked_sdpa(q, k, v, is_causal and kv_x is None, window)
+    else:
+        out = _sdpa(q, k, v, is_causal and kv_x is None, window)
+    if seq_axes is not None:
+        out = jax.lax.with_sharding_constraint(
+            out, P(seq_axes[0], seq_axes[1], None, None)
+        )
+    y = out.reshape(b, t, h * dh) @ p["wo"]
+    if kv_x is not None and "gate" in p:
+        y = jnp.tanh(p["gate"].astype(jnp.float32)).astype(y.dtype) * y
+    return y, (k, v)
+
+
+# ----------------------------------------------------------------- MLA paths
+def mla_qkv(x, p, cfg):
+    """Expanded-form MLA projections for train/prefill."""
+    b, t, d = x.shape
+    h = cfg.n_heads
+    nope, rope_d, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    if cfg.q_lora_rank:
+        qa = rms_norm(x @ p["wq_a"], {"scale": p["q_norm"]})
+        q = (qa @ p["wq_b"]).reshape(b, t, h, nope + rope_d)
+    else:
+        q = (x @ p["wq"]).reshape(b, t, h, nope + rope_d)
+    q_nope, q_pe = q[..., :nope], q[..., nope:]
+    kv_a = x @ p["wkv_a"]  # [B,T,r+rope]
+    c_kv = rms_norm(kv_a[..., :r], {"scale": p["kv_norm"]})
+    k_pe = kv_a[..., r:]
+    pos = jnp.arange(t)
+    q_pe = apply_rope(q_pe, pos, cfg.rope_theta)
+    k_pe = apply_rope(k_pe[:, :, None, :], pos, cfg.rope_theta)[:, :, 0]
+    kv = (c_kv @ p["wkv_b"]).reshape(b, t, h, nope + vd)
+    k_nope, v = kv[..., :nope], kv[..., nope:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_pe[:, :, None], (b, t, h, rope_d))], -1
+    )
+    qq = jnp.concatenate([q_nope, q_pe], -1)
+    return qq, k, v, c_kv, k_pe
+
+
+def mla_forward(x, p, cfg, window=None, seq_axes=None):
+    b, t, d = x.shape
+    q, k, v, c_kv, k_pe = mla_qkv(x, p, cfg)
+    if seq_axes is not None:
+        dp_, tp_ = seq_axes
+        q = jax.lax.with_sharding_constraint(q, P(dp_, tp_, None, None))
+        k = jax.lax.with_sharding_constraint(k, P(dp_, None, None, None))
+        v = jax.lax.with_sharding_constraint(v, P(dp_, None, None, None))
+    if t >= CHUNKED_THRESHOLD:
+        out = _chunked_sdpa(q, k, v, cfg.causal, window)
+    else:
+        out = _sdpa(q, k, v, cfg.causal, window)
+    y = out.reshape(b, t, cfg.n_heads * cfg.v_head_dim) @ p["wo"]
+    return y, (c_kv, k_pe)
+
+
+def _usable_dp(ax: Axes, mesh, batch: int) -> tuple[str, ...] | None:
+    """dp axes if the batch divides them, else None (replicate batch -
+    the long_500k batch=1 case)."""
+    n = 1
+    for a in ax.dp:
+        n *= int(mesh.shape[a])
+    return ax.dp if batch % n == 0 else None
+
+
+# --------------------------------------------------- sharded flash decode
+def gqa_flash_decode(q, k_cache, v_cache, pos, window, ax: Axes, mesh):
+    """q: [B,H,dh]; caches: [B,S,Hkv,dh] with S sharded over ax.tp.
+    Partial softmax per sequence stripe, pmax/psum merge. Heads stay whole,
+    so GQA ratios never have to divide the mesh."""
+    tp = ax.tp
+    n_shards = int(mesh.shape[tp])
+    s_total = k_cache.shape[1]
+    stripe = s_total // n_shards
+
+    def local_fn(q_loc, k_loc, v_loc, pos_arr):
+        # q_loc: [Bl,H,dh] (replicated over tp); k/v_loc: [Bl,stripe,Hkv,dh]
+        bl, h, dh = q_loc.shape
+        hkv = k_loc.shape[2]
+        g = h // hkv
+        pos_s = pos_arr[0]
+        shard = jax.lax.axis_index(tp)
+        base = shard * stripe
+        qg = q_loc.reshape(bl, hkv, g, dh).astype(jnp.float32) * (dh**-0.5)
+        scores = jnp.einsum("bhgd,bshd->bhgs", qg, k_loc.astype(jnp.float32))
+        kpos = base + jnp.arange(stripe)[None, None, None, :]
+        mask = kpos <= pos_s
+        if window is not None:
+            mask &= kpos > pos_s - window
+        scores = jnp.where(mask, scores, -1e30)
+        m_loc = scores.max(-1)  # [bl,hkv,g]
+        m_glob = jax.lax.pmax(m_loc, tp)
+        probs = jnp.exp(scores - m_glob[..., None])
+        l_loc = probs.sum(-1)
+        o_loc = jnp.einsum("bhgs,bshd->bhgd", probs, v_loc.astype(jnp.float32))
+        l_glob = jax.lax.psum(l_loc, tp)
+        o_glob = jax.lax.psum(o_loc, tp)
+        out = o_glob / jnp.maximum(l_glob, 1e-30)[..., None]
+        return out.reshape(bl, h, dh).astype(q_loc.dtype)
+
+    dp = _usable_dp(ax, mesh, q.shape[0])
+    return jax.shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(
+            P(dp, None, None),
+            P(dp, tp, None, None),
+            P(dp, tp, None, None),
+            P(None),
+        ),
+        out_specs=P(dp, None, None),
+        check_vma=False,
+    )(q, k_cache, v_cache, pos[None])
+
+
+def mla_flash_decode(q_lat, q_pe, ckv_cache, kpe_cache, pos, ax: Axes, mesh):
+    """Absorbed-form MLA decode over a latent cache sharded on sequence.
+    q_lat: [B,H,r], q_pe: [B,H,rope]; caches: [B,S,r], [B,S,rope].
+    Returns ctx_lat: [B,H,r]."""
+    tp = ax.tp
+    n_shards = int(mesh.shape[tp])
+    stripe = ckv_cache.shape[1] // n_shards
+
+    def local_fn(ql, qp, ckv, kpe, pos_arr):
+        bl, h, r = ql.shape
+        pos_s = pos_arr[0]
+        base = jax.lax.axis_index(tp) * stripe
+        scores = jnp.einsum(
+            "bhr,bsr->bhs", ql.astype(jnp.float32), ckv.astype(jnp.float32)
+        ) + jnp.einsum(
+            "bhe,bse->bhs", qp.astype(jnp.float32), kpe.astype(jnp.float32)
+        )
+        scores = scores * ((r + qp.shape[-1]) ** -0.5)
+        kpos = base + jnp.arange(stripe)[None, None, :]
+        scores = jnp.where(kpos <= pos_s, scores, -1e30)
+        m_loc = scores.max(-1)
+        m_glob = jax.lax.pmax(m_loc, tp)
+        probs = jnp.exp(scores - m_glob[..., None])
+        l_glob = jax.lax.psum(probs.sum(-1), tp)
+        ctx = jax.lax.psum(
+            jnp.einsum("bhs,bsr->bhr", probs, ckv.astype(jnp.float32)), tp
+        )
+        out = ctx / jnp.maximum(l_glob, 1e-30)[..., None]
+        return out.astype(ql.dtype)
+
+    dp = _usable_dp(ax, mesh, q_lat.shape[0])
+    return jax.shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(
+            P(dp, None, None),
+            P(dp, None, None),
+            P(dp, tp, None),
+            P(dp, tp, None),
+            P(None),
+        ),
+        out_specs=P(dp, None, None),
+        check_vma=False,
+    )(q_lat, q_pe, ckv_cache, kpe_cache, pos[None])

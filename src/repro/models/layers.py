@@ -1,0 +1,363 @@
+"""Shared layers: norms, RoPE, dense FFN, and shard_map expert-parallel MoE.
+
+Sharding convention (2-D FSDP x TP, "pod" = extra pure-DP axis):
+  * ``ax.tp``  - the tensor-parallel mesh axis ("model"),
+  * ``ax.dp``  - tuple of data axes params are FSDP-sharded over
+                 (("data",) single-pod, ("pod","data") multi-pod).
+Every init_* has a matching specs_* mirroring the pytree with PartitionSpecs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.ad_checkpoint
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Axes:
+    dp: tuple[str, ...] = ("data",)
+    tp: str = "model"
+
+    @property
+    def batch(self):
+        return self.dp  # activation batch axes
+
+
+# --------------------------------------------------------------------- norms
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def specs_rmsnorm() -> dict:
+    return {"scale": P(None)}
+
+
+def rms_norm(x, p, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def qk_head_norm(x, scale, eps: float = 1e-6):
+    """Per-head RMS norm over head_dim (qwen3/gemma3). x: [..., H, Dh]."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- RoPE
+def rope_freqs(dh: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., T, H, Dh] (rotate pairs); positions: [..., T]."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # [Dh/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., T, Dh/2]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- dense FFN
+def init_dense_ffn(key, d: int, f: int, activation: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d**-0.5
+    s_out = f**-0.5
+    p = {
+        "w_in": jax.random.normal(k1, (d, f), dtype) * s_in,
+        "w_out": jax.random.normal(k2, (f, d), dtype) * s_out,
+    }
+    if activation == "swiglu":
+        p["w_gate"] = jax.random.normal(k3, (d, f), dtype) * s_in
+    return p
+
+
+def specs_dense_ffn(ax: Axes, activation: str, weight_shard: str = "d") -> dict:
+    if weight_shard == "f":
+        # weight-stationary decode: hidden dim sharded over every axis,
+        # activations replicated in D, partial outputs psum'd by GSPMD
+        full = (*ax.dp, ax.tp)
+        p = {"w_in": P(None, full), "w_out": P(full, None)}
+        if activation == "swiglu":
+            p["w_gate"] = P(None, full)
+        return p
+    p = {"w_in": P(ax.dp, ax.tp), "w_out": P(ax.tp, ax.dp)}
+    if activation == "swiglu":
+        p["w_gate"] = P(ax.dp, ax.tp)
+    return p
+
+
+def _act(h, g, activation: str):
+    if activation == "swiglu":
+        return jax.nn.silu(g) * h
+    if activation == "gelu":
+        return jax.nn.gelu(h)
+    if activation == "sq_relu":
+        r = jax.nn.relu(h)
+        return r * r
+    raise ValueError(activation)
+
+
+def dense_ffn(x, p, activation: str):
+    h = x @ p["w_in"]
+    g = x @ p["w_gate"] if "w_gate" in p else None
+    return _act(h, g, activation) @ p["w_out"]
+
+
+# ------------------------------------------------------ expert-parallel MoE
+def init_moe(key, d: int, f: int, n_experts: int, n_shared: int,
+             activation: str, dtype) -> dict:
+    keys = jax.random.split(key, 6)
+    s_in = d**-0.5
+    s_out = f**-0.5
+    p = {
+        "router": jax.random.normal(keys[0], (d, n_experts), jnp.float32) * s_in,
+        "w_in": jax.random.normal(keys[1], (n_experts, d, f), dtype) * s_in,
+        "w_out": jax.random.normal(keys[2], (n_experts, f, d), dtype) * s_out,
+    }
+    if activation == "swiglu":
+        p["w_gate"] = jax.random.normal(keys[3], (n_experts, d, f), dtype) * s_in
+    if n_shared:
+        p["shared"] = init_dense_ffn(keys[4], d, n_shared * f, activation, dtype)
+    return p
+
+
+def specs_moe(ax: Axes, activation: str, n_shared: int) -> dict:
+    p = {
+        "router": P(None, None),
+        "w_in": P(ax.tp, ax.dp, None),
+        "w_out": P(ax.tp, None, ax.dp),
+    }
+    if activation == "swiglu":
+        p["w_gate"] = P(ax.tp, ax.dp, None)
+    if n_shared:
+        p["shared"] = specs_dense_ffn(ax, activation)
+    return p
+
+
+def _positions_in_expert(e_flat, n_experts: int):
+    """pos[i] = rank of entry i within its expert group (sort-based, no
+    [T,E] cumsum materialisation)."""
+    order = jnp.argsort(e_flat)
+    sorted_e = e_flat[order]
+    start = jnp.searchsorted(sorted_e, jnp.arange(n_experts))
+    pos_sorted = jnp.arange(e_flat.shape[0]) - start[sorted_e]
+    pos = jnp.zeros_like(pos_sorted).at[order].set(pos_sorted)
+    return pos
+
+
+def moe_ffn(x, p, cfg, ax: Axes, mesh):
+    """Expert-parallel MoE under shard_map: explicit token all-to-all over the
+    TP axis, per-device grouped GEMMs over its local experts, FSDP weight
+    all-gather over the dp axes. Returns (y, aux_loss)."""
+    e = cfg.n_experts
+    top_k = cfg.top_k
+    act = cfg.activation
+    dp, tp = ax.dp, ax.tp
+    has_gate = act == "swiglu"
+    n_shards = int(mesh.shape[tp])
+    assert e % n_shards == 0, (e, n_shards)
+    el = e // n_shards
+
+    def local_fn(x_loc, router, w_in, w_gate, w_out):
+        # x_loc: [Bl, S, D]; w_in/w_gate: [El, Dl, F]; w_out: [El, F, Dl]
+        bl, s, d = x_loc.shape
+        tl = bl * s
+        # floor 8 aligns training tiles; decode batches are tiny - adapt
+        cap_floor = 8 if tl * top_k >= 8 * e else 1
+        cap = int(max(cap_floor, (-(-tl * top_k // e)) * cfg.capacity_factor))
+        tokens = x_loc.reshape(tl, d)
+        logits = tokens.astype(jnp.float32) @ router
+        probs = jax.nn.softmax(logits, axis=-1)
+        w_topk, idx = jax.lax.top_k(probs, top_k)  # [Tl, k]
+        w_topk = w_topk / jnp.maximum(w_topk.sum(-1, keepdims=True), 1e-9)
+        # aux load-balance loss (Switch-style)
+        frac_routed = jnp.mean(
+            jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32), axis=0
+        )
+        aux = e * jnp.mean(frac_routed * jnp.mean(probs, axis=0))
+        e_flat = idx.reshape(-1)  # [Tl*k]
+        pos = _positions_in_expert(e_flat, e)
+        keep = pos < cap
+        dest = jnp.where(keep, e_flat * cap + pos, e * cap)  # overflow slot
+        tok_rep = jnp.repeat(tokens, top_k, axis=0)  # [Tl*k, D]
+        send = jnp.zeros((e * cap + 1, d), x_loc.dtype).at[dest].set(tok_rep)
+        # tiled all-to-all: block q (= experts of tp-shard q) goes to shard q
+        recv = jax.lax.all_to_all(
+            send[: e * cap], tp, split_axis=0, concat_axis=0, tiled=True
+        )
+        # recv block j = tokens shard j routed to MY local experts
+        grouped = (
+            recv.reshape(n_shards, el, cap, d)
+            .transpose(1, 0, 2, 3)
+            .reshape(el, n_shards * cap, d)
+        )
+        # FSDP weight gather over dp axes: minor axis first so the chunk
+        # order reconstructs the global D dimension
+        w_in_full, w_out_full, w_gate_full = w_in, w_out, w_gate
+        for a in reversed(dp):
+            w_in_full = jax.lax.all_gather(w_in_full, a, axis=1, tiled=True)
+            w_out_full = jax.lax.all_gather(w_out_full, a, axis=2, tiled=True)
+            if has_gate:
+                w_gate_full = jax.lax.all_gather(w_gate_full, a, axis=1, tiled=True)
+        h = jnp.einsum("ecd,edf->ecf", grouped, w_in_full)
+        if has_gate:
+            g = jnp.einsum("ecd,edf->ecf", grouped, w_gate_full)
+            h = jax.nn.silu(g) * h
+        elif act == "gelu":
+            h = jax.nn.gelu(h)
+        else:
+            r = jax.nn.relu(h)
+            h = r * r
+        y = jnp.einsum("ecf,efd->ecd", h, w_out_full)
+        back = (
+            y.reshape(el, n_shards, cap, d)
+            .transpose(1, 0, 2, 3)
+            .reshape(e * cap, d)
+        )
+        ret = jax.lax.all_to_all(back, tp, split_axis=0, concat_axis=0, tiled=True)
+        ret_flat = jnp.concatenate([ret, jnp.zeros((1, d), x_loc.dtype)], axis=0)
+        vals = ret_flat[dest] * (keep * w_topk.reshape(-1))[:, None].astype(
+            x_loc.dtype
+        )
+        out = vals.reshape(tl, top_k, d).sum(axis=1)
+        return out.reshape(bl, s, d), aux[None]
+
+    n_dp = 1
+    for a in dp:
+        n_dp *= int(mesh.shape[a])
+    dp_x = dp if x.shape[0] % n_dp == 0 else None  # batch=1 decode: replicate
+    spec_x = P(dp_x, None, None)
+    gate_spec = P(tp, dp, None) if has_gate else P(None)
+    gate_arg = p.get("w_gate", jnp.zeros((1,), x.dtype))
+    y, aux = jax.shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(spec_x, P(None, None), P(tp, dp, None), gate_spec, P(tp, None, dp)),
+        out_specs=(spec_x, P(dp_x)),
+        check_vma=False,
+    )(x, p["router"], p["w_in"], gate_arg, p["w_out"])
+    y = jax.ad_checkpoint.checkpoint_name(y, "moe_out")
+    aux_loss = aux.mean()
+    if "shared" in p:
+        y = y + dense_ffn(x, p["shared"], act)
+    return y, aux_loss
+
+
+def specs_moe_fshard(ax: Axes, activation: str, n_shared: int) -> dict:
+    """Decode-mode expert weights: hidden dim sharded over dp, weights never
+    gathered (they dwarf decode activations)."""
+    p = {
+        "router": P(None, None),
+        "w_in": P(ax.tp, None, ax.dp),
+        "w_out": P(ax.tp, ax.dp, None),
+    }
+    if activation == "swiglu":
+        p["w_gate"] = P(ax.tp, None, ax.dp)
+    if n_shared:
+        p["shared"] = specs_dense_ffn(ax, activation)
+    return p
+
+
+def moe_ffn_fshard(x, p, cfg, ax: Axes, mesh):
+    """Weight-stationary expert-parallel MoE for decode: activations are tiny
+    (B tokens) so we all-gather tokens over dp, a2a over tp as usual, compute
+    each dp shard's F-slice of every expert GEMM, and psum the partial
+    outputs over dp. Zero weight movement. Returns (y, aux)."""
+    e, top_k, act = cfg.n_experts, cfg.top_k, cfg.activation
+    dp, tp = ax.dp, ax.tp
+    has_gate = act == "swiglu"
+    n_tp = int(mesh.shape[tp])
+    el = e // n_tp
+    n_dp = 1
+    for a in dp:
+        n_dp *= int(mesh.shape[a])
+    bdiv = x.shape[0] % n_dp == 0
+    dp_x = dp if bdiv else None
+
+    def local_fn(x_loc, router, w_in, w_gate, w_out):
+        # x_loc [Bl,S,D]; w_in/w_gate [El, D, Fl]; w_out [El, Fl, D]
+        bl, s, d = x_loc.shape
+        xg = x_loc
+        if bdiv:
+            for a in reversed(dp):
+                xg = jax.lax.all_gather(xg, a, axis=0, tiled=True)
+        tl = xg.shape[0] * s
+        tokens = xg.reshape(tl, d)
+        # floor 8 aligns training tiles; decode batches are tiny - adapt
+        cap_floor = 8 if tl * top_k >= 8 * e else 1
+        cap = int(max(cap_floor, (-(-tl * top_k // e)) * cfg.capacity_factor))
+        logits = tokens.astype(jnp.float32) @ router
+        probs = jax.nn.softmax(logits, axis=-1)
+        w_topk, idx = jax.lax.top_k(probs, top_k)
+        w_topk = w_topk / jnp.maximum(w_topk.sum(-1, keepdims=True), 1e-9)
+        frac = jnp.mean(jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32), axis=0)
+        aux = e * jnp.mean(frac * jnp.mean(probs, axis=0))
+        e_flat = idx.reshape(-1)
+        pos = _positions_in_expert(e_flat, e)
+        keep = pos < cap
+        dest = jnp.where(keep, e_flat * cap + pos, e * cap)
+        tok_rep = jnp.repeat(tokens, top_k, axis=0)
+        send = jnp.zeros((e * cap + 1, d), x_loc.dtype).at[dest].set(tok_rep)
+        recv = jax.lax.all_to_all(
+            send[: e * cap], tp, split_axis=0, concat_axis=0, tiled=True
+        )
+        grouped = (
+            recv.reshape(n_tp, el, cap, d).transpose(1, 0, 2, 3)
+            .reshape(el, n_tp * cap, d)
+        )
+        h = jnp.einsum("ecd,edf->ecf", grouped, w_in)  # F-slice only
+        if has_gate:
+            g = jnp.einsum("ecd,edf->ecf", grouped, w_gate)
+            h = jax.nn.silu(g) * h
+        elif act == "gelu":
+            h = jax.nn.gelu(h)
+        else:
+            r = jax.nn.relu(h)
+            h = r * r
+        y = jnp.einsum("ecf,efd->ecd", h, w_out)  # partial over F
+        for a in dp:
+            y = jax.lax.psum(y, a)  # full expert outputs, weights unmoved
+        back = (
+            y.reshape(el, n_tp, cap, d).transpose(1, 0, 2, 3).reshape(e * cap, d)
+        )
+        ret = jax.lax.all_to_all(back, tp, split_axis=0, concat_axis=0, tiled=True)
+        ret_flat = jnp.concatenate([ret, jnp.zeros((1, d), x_loc.dtype)], axis=0)
+        vals = ret_flat[dest] * (keep * w_topk.reshape(-1))[:, None].astype(
+            x_loc.dtype
+        )
+        out_all = vals.reshape(tl, top_k, d).sum(axis=1).reshape(xg.shape)
+        if bdiv:  # take back this shard's batch rows
+            row = jax.lax.axis_index(dp[-1])
+            for a in dp[:-1]:
+                row = row + jax.lax.axis_index(a) * int(mesh.shape[dp[-1]])
+            out = jax.lax.dynamic_slice_in_dim(out_all, row * bl, bl, axis=0)
+        else:
+            out = out_all
+        return out, aux[None]
+
+    spec_x = P(dp_x, None, None)
+    gate_spec = P(tp, None, dp) if has_gate else P(None)
+    gate_arg = p.get("w_gate", jnp.zeros((1,), x.dtype))
+    y, aux = jax.shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(spec_x, P(None, None), P(tp, None, dp), gate_spec,
+                  P(tp, dp, None)),
+        out_specs=(spec_x, P(dp_x)),
+        check_vma=False,
+    )(x, p["router"], p["w_in"], gate_arg, p["w_out"])
+    aux_loss = aux.mean()
+    if "shared" in p:
+        y = y + dense_ffn(x, p["shared"], act)
+    return y, aux_loss

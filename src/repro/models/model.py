@@ -1,0 +1,510 @@
+"""Model assembly: embed -> prefix layers -> scan(super-blocks) -> head.
+
+The same apply code serves all ten assigned architectures; heterogeneity
+lives in ``cfg.prefix``/``cfg.block`` LayerSpecs. Layer stacks are repeated
+with ``lax.scan`` over parameter pytrees stacked on a leading ``n_blocks``
+axis, keeping HLO size ~O(len(block)) regardless of depth (60-100-layer
+models compile in seconds on the CPU dry-run host).
+
+Decode carries a cache pytree mirroring the block structure; attention
+caches shard their sequence dim over the TP axis and use the shard_map
+flash-decode (see attention.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.attention import (
+    gqa_flash_decode,
+    gqa_forward,
+    init_attention,
+    mla_flash_decode,
+    mla_forward,
+    specs_attention,
+)
+from repro.models.config import LayerSpec, ModelConfig
+from repro.models.layers import (
+    Axes,
+    apply_rope,
+    dense_ffn,
+    init_dense_ffn,
+    init_moe,
+    init_rmsnorm,
+    moe_ffn,
+    qk_head_norm,
+    rms_norm,
+    specs_dense_ffn,
+    specs_moe,
+    specs_rmsnorm,
+)
+from repro.models.mamba import (
+    init_mamba,
+    mamba_decode_step,
+    mamba_forward,
+    specs_mamba,
+)
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ----------------------------------------------------------------- layer p/s
+def init_layer(key, spec: LayerSpec, cfg: ModelConfig) -> dict:
+    dt = _dtype(cfg)
+    keys = jax.random.split(key, 4)
+    p: dict = {"norm1": init_rmsnorm(cfg.d_model, dt)}
+    if spec.mixer == "attn":
+        p["attn"] = init_attention(keys[0], cfg, dt)
+    elif spec.mixer == "cross_attn":
+        p["attn"] = init_attention(keys[0], cfg, dt, cross=True)
+    elif spec.mixer == "mamba":
+        p["mamba"] = init_mamba(keys[0], cfg, dt)
+    if spec.ffn != "none":
+        p["norm2"] = init_rmsnorm(cfg.d_model, dt)
+    if spec.ffn in ("dense", "moe_dense"):
+        p["ffn"] = init_dense_ffn(keys[1], cfg.d_model, cfg.d_ff, cfg.activation, dt)
+    if spec.ffn in ("moe", "moe_dense"):
+        p["moe"] = init_moe(
+            keys[2], cfg.d_model, cfg.d_ff_expert or cfg.d_ff,
+            cfg.n_experts, cfg.n_shared_experts, cfg.activation, dt,
+        )
+    return p
+
+
+def specs_layer(spec: LayerSpec, cfg: ModelConfig, ax: Axes) -> dict:
+    p: dict = {"norm1": specs_rmsnorm()}
+    if spec.mixer in ("attn", "cross_attn"):
+        p["attn"] = specs_attention(cfg, ax, cross=(spec.mixer == "cross_attn"))
+    elif spec.mixer == "mamba":
+        p["mamba"] = specs_mamba(ax)
+    if spec.ffn != "none":
+        p["norm2"] = specs_rmsnorm()
+    if spec.ffn in ("dense", "moe_dense"):
+        p["ffn"] = specs_dense_ffn(ax, cfg.activation, cfg.dense_weight_shard)
+    if spec.ffn in ("moe", "moe_dense"):
+        if cfg.moe_weight_shard == "f":
+            from repro.models.layers import specs_moe_fshard
+
+            p["moe"] = specs_moe_fshard(ax, cfg.activation, cfg.n_shared_experts)
+        else:
+            p["moe"] = specs_moe(ax, cfg.activation, cfg.n_shared_experts)
+    return p
+
+
+def _wsc(x, spec):
+    """with_sharding_constraint under whatever mesh is ambient."""
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def apply_layer(x, p, spec: LayerSpec, cfg: ModelConfig, ax: Axes, mesh,
+                img_embeds=None):
+    """Full-sequence layer application. Returns (x, aux_loss, cache_entry)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    seq_sp = cfg.activation_partitioning == "seq"
+    if seq_sp:
+        # sequence-parallel: activations carry [B(dp), T(tp), D]. Attention
+        # q stays seq-sharded; K/V are all-gathered (small); this avoids
+        # GSPMD's full-score all-reduce when head counts don't divide the
+        # mesh (see EXPERIMENTS.md §Perf).
+        x = _wsc(x, (ax.dp, ax.tp, None))
+    h = rms_norm(x, p["norm1"])
+    if spec.mixer == "attn":
+        if seq_sp:
+            h = _wsc(h, (ax.dp, ax.tp, None))
+        if cfg.use_mla:
+            y, kv = mla_forward(h, p["attn"], cfg, window=spec.window,
+                                seq_axes=(ax.dp, ax.tp) if seq_sp else None)
+        else:
+            y, kv = gqa_forward(h, p["attn"], cfg, window=spec.window,
+                                seq_axes=(ax.dp, ax.tp) if seq_sp else None)
+        cache = kv
+        x = x + y
+    elif spec.mixer == "cross_attn":
+        y, kv = gqa_forward(h, p["attn"], cfg, window=None, kv_x=img_embeds,
+                            seq_axes=(ax.dp, ax.tp) if seq_sp else None)
+        cache = kv
+        x = x + y
+    elif spec.mixer == "mamba":
+        if seq_sp:  # the scan is sequential over T: gather the sequence
+            h = _wsc(h, (ax.dp, None, None))
+        y, states = mamba_forward(h, p["mamba"], cfg)
+        cache = states
+        x = x + y
+    if spec.ffn != "none":
+        if seq_sp:
+            x = _wsc(x, (ax.dp, ax.tp, None))
+        h2 = rms_norm(x, p["norm2"])
+        out = jnp.zeros_like(x)
+        if spec.ffn in ("dense", "moe_dense"):
+            out = out + dense_ffn(h2, p["ffn"], cfg.activation)
+        if spec.ffn in ("moe", "moe_dense"):
+            if seq_sp:  # EP shard_map expects batch-sharded tokens
+                h2 = _wsc(h2, (ax.dp, None, None))
+            moe_impl = moe_ffn
+            if cfg.moe_weight_shard == "f":
+                from repro.models.layers import moe_ffn_fshard as moe_impl
+            mo, a = moe_impl(h2, p["moe"], cfg, ax, mesh)
+            if seq_sp:
+                mo = _wsc(mo, (ax.dp, ax.tp, None))
+            out = out + mo
+            aux = aux + a
+        x = x + out
+    return x, aux, cache
+
+
+# --------------------------------------------------------------------- model
+class Model:
+    def __init__(self, cfg: ModelConfig, ax: Axes | None = None, mesh=None):
+        self.cfg = cfg
+        self.ax = ax or Axes()
+        self.mesh = mesh
+
+    # ------------------------------------------------------------------ init
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        keys = jax.random.split(key, 4 + len(cfg.prefix))
+        params: dict = {}
+        if cfg.frontend == "frames":
+            pass  # frame embeddings arrive precomputed at d_model width
+        else:
+            params["embed"] = (
+                jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model), dt)
+                * 0.02
+            )
+        params["prefix"] = tuple(
+            init_layer(keys[4 + i], s, cfg) for i, s in enumerate(cfg.prefix)
+        )
+        def one_block(k):
+            bkeys = jax.random.split(k, len(cfg.block))
+            return tuple(
+                init_layer(bk, s, cfg) for bk, s in zip(bkeys, cfg.block)
+            )
+        block_keys = jax.random.split(keys[1], cfg.n_blocks)
+        blocks = [one_block(k) for k in block_keys]
+        params["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+        params["final_norm"] = init_rmsnorm(cfg.d_model, dt)
+        if not cfg.tie_embeddings:
+            params["unembed"] = (
+                jax.random.normal(keys[2], (cfg.d_model, cfg.vocab_size), dt)
+                * (cfg.d_model**-0.5)
+            )
+        return params
+
+    def init_shapes(self) -> dict:
+        return jax.eval_shape(lambda: self.init(jax.random.key(0)))
+
+    # ----------------------------------------------------------------- specs
+    def param_specs(self) -> dict:
+        cfg, ax = self.cfg, self.ax
+        specs: dict = {}
+        if cfg.frontend != "frames":
+            specs["embed"] = P(ax.tp, ax.dp)  # vocab x d_model
+        specs["prefix"] = tuple(specs_layer(s, cfg, ax) for s in cfg.prefix)
+        specs["blocks"] = jax.tree.map(
+            lambda spec: P(None, *spec),
+            tuple(specs_layer(s, cfg, ax) for s in cfg.block),
+            is_leaf=lambda x: isinstance(x, P),
+        )
+        specs["final_norm"] = specs_rmsnorm()
+        if not cfg.tie_embeddings:
+            specs["unembed"] = P(ax.dp, ax.tp)
+        return specs
+
+    # --------------------------------------------------------------- forward
+    def forward(self, params, inputs) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Full-sequence forward. inputs: dict with "tokens" [B,S] (or
+        "frames" [B,S,D]) and optionally "image_embeds" [B,N,D].
+        Returns (logits [B,S,V], aux_loss)."""
+        cfg, ax, mesh = self.cfg, self.ax, self.mesh
+        if cfg.frontend == "frames":
+            x = inputs["frames"].astype(_dtype(cfg))
+        else:
+            x = params["embed"][inputs["tokens"]]
+            if cfg.embed_scale:
+                x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+        img = inputs.get("image_embeds")
+        aux_total = jnp.zeros((), jnp.float32)
+        for spec, p in zip(cfg.prefix, params["prefix"]):
+            x, aux, _ = apply_layer(x, p, spec, cfg, ax, mesh, img)
+            aux_total = aux_total + aux
+
+        def block_fn(carry, block_params):
+            x, aux_acc = carry
+            for i, spec in enumerate(cfg.block):
+                x, aux, _ = apply_layer(
+                    x, block_params[i], spec, cfg, ax, mesh, img
+                )
+                aux_acc = aux_acc + aux
+            return (x, aux_acc), None
+
+        body = block_fn
+        if cfg.remat:
+            policies = {
+                "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+                "nothing": jax.checkpoint_policies.nothing_saveable,
+                "save_moe": jax.checkpoint_policies.save_only_these_names(
+                    "moe_out"
+                ),
+            }
+            body = jax.checkpoint(block_fn, policy=policies[cfg.remat_policy])
+        (x, aux_total), _ = jax.lax.scan(
+            body, (x, aux_total), params["blocks"]
+        )
+        x = rms_norm(x, params["final_norm"])
+        if cfg.tie_embeddings:
+            logits = x @ params["embed"].T
+        else:
+            logits = x @ params["unembed"]
+        return logits, aux_total
+
+    # ----------------------------------------------------------------- cache
+    def init_cache(self, batch: int, seq: int, dtype=None) -> dict:
+        """Decode cache pytree mirroring prefix/block structure.
+
+        Sliding-window layers get a *ring* cache of length ``window`` (slot =
+        pos % window, entries rope'd at insert) - this is what keeps e.g.
+        gemma3's 40 local layers from carrying 500k-long caches."""
+        cfg = self.cfg
+        dt = dtype or _dtype(cfg)
+        di = cfg.mamba_expand * cfg.d_model
+
+        def layer_cache(spec: LayerSpec):
+            if spec.mixer == "attn":
+                length = seq if spec.window is None else min(seq, spec.window)
+                if cfg.use_mla:
+                    return {
+                        "ckv": jnp.zeros((batch, length, cfg.kv_lora_rank), dt),
+                        "kpe": jnp.zeros((batch, length, cfg.qk_rope_dim), dt),
+                    }
+                dh = cfg.head_dim
+                return {
+                    "k": jnp.zeros((batch, length, cfg.n_kv_heads, dh), dt),
+                    "v": jnp.zeros((batch, length, cfg.n_kv_heads, dh), dt),
+                }
+            if spec.mixer == "cross_attn":
+                dh = cfg.head_dim
+                return {
+                    "k_img": jnp.zeros((batch, cfg.n_img_tokens, cfg.n_kv_heads, dh), dt),
+                    "v_img": jnp.zeros((batch, cfg.n_img_tokens, cfg.n_kv_heads, dh), dt),
+                }
+            if spec.mixer == "mamba":
+                return {
+                    "conv": jnp.zeros((batch, cfg.d_conv - 1, di), dt),
+                    "ssm": jnp.zeros((batch, di, cfg.ssm_state), jnp.float32),
+                }
+            return {}
+
+        prefix = tuple(layer_cache(s) for s in cfg.prefix)
+        one = tuple(layer_cache(s) for s in cfg.block)
+        blocks = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_blocks,) + x.shape), one
+        )
+        return {"prefix": prefix, "blocks": blocks}
+
+    def cache_specs(self) -> dict:
+        cfg, ax = self.cfg, self.ax
+
+        def layer_spec(spec: LayerSpec):
+            if spec.mixer == "attn":
+                if spec.window is not None:
+                    # ring caches are small -> replicate over tp
+                    if cfg.use_mla:
+                        return {"ckv": P(ax.dp, None, None), "kpe": P(ax.dp, None, None)}
+                    return {
+                        "k": P(ax.dp, None, None, None),
+                        "v": P(ax.dp, None, None, None),
+                    }
+                if cfg.use_mla:
+                    return {
+                        "ckv": P(ax.dp, ax.tp, None),
+                        "kpe": P(ax.dp, ax.tp, None),
+                    }
+                return {
+                    "k": P(ax.dp, ax.tp, None, None),
+                    "v": P(ax.dp, ax.tp, None, None),
+                }
+            if spec.mixer == "cross_attn":
+                return {
+                    "k_img": P(ax.dp, None, None, None),
+                    "v_img": P(ax.dp, None, None, None),
+                }
+            if spec.mixer == "mamba":
+                return {"conv": P(ax.dp, None, ax.tp), "ssm": P(ax.dp, ax.tp, None)}
+            return {}
+
+        prefix = tuple(layer_spec(s) for s in cfg.prefix)
+        one = tuple(layer_spec(s) for s in cfg.block)
+        blocks = jax.tree.map(
+            lambda s: P(None, *s), one, is_leaf=lambda x: isinstance(x, P)
+        )
+        return {"prefix": prefix, "blocks": blocks}
+
+    # ---------------------------------------------------------------- decode
+    def _decode_layer(self, x, p, spec: LayerSpec, cache: dict, pos):
+        """One-token step for one layer. x: [B,1,D]."""
+        cfg, ax, mesh = self.cfg, self.ax, self.mesh
+        b = x.shape[0]
+        h = rms_norm(x, p["norm1"])
+        if spec.mixer == "attn":
+            if cfg.use_mla:
+                x, cache = self._decode_mla(x, h, p["attn"], cache, pos, spec)
+            else:
+                x, cache = self._decode_gqa(x, h, p["attn"], cache, pos, spec)
+        elif spec.mixer == "cross_attn":
+            hq = h
+            hcur = cache["k_img"].shape[1]
+            y = _plain_cross_decode(hq, p["attn"], cfg, cache)
+            x = x + y
+        elif spec.mixer == "mamba":
+            y, (conv, ssm) = mamba_decode_step(
+                h, p["mamba"], cfg, cache["conv"], cache["ssm"]
+            )
+            cache = {"conv": conv, "ssm": ssm}
+            x = x + y
+        if spec.ffn != "none":
+            h2 = rms_norm(x, p["norm2"])
+            out = jnp.zeros_like(x)
+            if spec.ffn in ("dense", "moe_dense"):
+                out = out + dense_ffn(h2, p["ffn"], cfg.activation)
+            if spec.ffn in ("moe", "moe_dense"):
+                moe_impl = moe_ffn
+                if cfg.moe_weight_shard == "f":
+                    from repro.models.layers import moe_ffn_fshard as moe_impl
+                mo, _ = moe_impl(h2, p["moe"], cfg, ax, mesh)
+                out = out + mo
+            x = x + out
+        return x, cache
+
+    def _decode_gqa(self, x, h, p, cache, pos, spec: LayerSpec):
+        cfg, ax, mesh = self.cfg, self.ax, self.mesh
+        b = x.shape[0]
+        hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        q = (h @ p["wq"]).reshape(b, 1, hq, dh)
+        k = (h @ p["wk"]).reshape(b, 1, hkv, dh)
+        v = (h @ p["wv"]).reshape(b, 1, hkv, dh)
+        if cfg.qk_norm:
+            q = qk_head_norm(q, p["q_scale"])
+            k = qk_head_norm(k, p["k_scale"])
+        posv = jnp.full((b, 1), pos)
+        q = apply_rope(q, posv, cfg.rope_theta)
+        k = apply_rope(k, posv, cfg.rope_theta)
+        length = cache["k"].shape[1]
+        is_ring = spec.window is not None and length == spec.window
+        slot = jax.lax.rem(pos, length) if is_ring else pos
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0)
+        )
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0)
+        )
+        if is_ring:
+            # ring entries are rope'd at insert; all slots hold the last
+            # `window` positions once warm. Mask unwritten slots while cold.
+            g = hq // hkv
+            qg = q[:, 0].reshape(b, hkv, g, dh).astype(jnp.float32) * (dh**-0.5)
+            scores = jnp.einsum(
+                "bhgd,bshd->bhgs", qg, k_cache.astype(jnp.float32)
+            )
+            slots = jnp.arange(length)
+            valid = (slots <= pos) | (pos >= length)
+            scores = jnp.where(valid[None, None, None], scores, -1e30)
+            probs = jax.nn.softmax(scores, axis=-1)
+            out = jnp.einsum(
+                "bhgs,bshd->bhgd", probs, v_cache.astype(jnp.float32)
+            ).reshape(b, hq, dh).astype(x.dtype)
+        else:
+            out = gqa_flash_decode(
+                q[:, 0], k_cache, v_cache, pos, spec.window, ax, mesh
+            )  # [B,H,dh]
+        y = out.reshape(b, 1, hq * dh) @ p["wo"]
+        return x + y, {"k": k_cache, "v": v_cache}
+
+    def _decode_mla(self, x, h, p, cache, pos, spec: LayerSpec):
+        cfg, ax, mesh = self.cfg, self.ax, self.mesh
+        b = x.shape[0]
+        nh = cfg.n_heads
+        nope, rope_d, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+        r = cfg.kv_lora_rank
+        if cfg.q_lora_rank:
+            qa = rms_norm(h @ p["wq_a"], {"scale": p["q_norm"]})
+            q = (qa @ p["wq_b"]).reshape(b, 1, nh, nope + rope_d)
+        else:
+            q = (h @ p["wq"]).reshape(b, 1, nh, nope + rope_d)
+        q_nope, q_pe = q[..., :nope], q[..., nope:]
+        posv = jnp.full((b, 1), pos)
+        q_pe = apply_rope(q_pe, posv, cfg.rope_theta)
+        kv_a = h @ p["wkv_a"]  # [B,1,r+rope]
+        c_kv = rms_norm(kv_a[..., :r], {"scale": p["kv_norm"]})
+        k_pe = apply_rope(kv_a[..., None, r:], posv, cfg.rope_theta)[:, :, 0]
+        ckv_cache = jax.lax.dynamic_update_slice(
+            cache["ckv"], c_kv.astype(cache["ckv"].dtype), (0, pos, 0)
+        )
+        kpe_cache = jax.lax.dynamic_update_slice(
+            cache["kpe"], k_pe.astype(cache["kpe"].dtype), (0, pos, 0)
+        )
+        # absorbed projections
+        w_uk = p["wkv_b"][:, : nh * nope].reshape(r, nh, nope)
+        w_uv = p["wkv_b"][:, nh * nope :].reshape(r, nh, vd)
+        q_lat = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0], w_uk)
+        ctx_lat = mla_flash_decode(
+            q_lat, q_pe[:, 0], ckv_cache, kpe_cache, pos, ax, mesh
+        )  # [B,H,r]
+        out = jnp.einsum("bhr,rhv->bhv", ctx_lat, w_uv)
+        y = out.reshape(b, 1, nh * vd) @ p["wo"]
+        return x + y, {"ckv": ckv_cache, "kpe": kpe_cache}
+
+    def decode_step(self, params, cache, tokens, pos):
+        """One decode step. tokens: [B,1] int32; pos: scalar int32 (position
+        being written). Returns (logits [B,1,V], new_cache)."""
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        if cfg.embed_scale:
+            x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+        new_prefix = []
+        for spec, p, c in zip(cfg.prefix, params["prefix"], cache["prefix"]):
+            x, c2 = self._decode_layer(x, p, spec, c, pos)
+            new_prefix.append(c2)
+
+        def block_fn(x, scanned):
+            block_params, block_cache = scanned
+            new_cache = []
+            for i, spec in enumerate(cfg.block):
+                x, c2 = self._decode_layer(x, block_params[i], spec, block_cache[i], pos)
+                new_cache.append(c2)
+            return x, tuple(new_cache)
+
+        x, new_blocks = jax.lax.scan(
+            block_fn, x, (params["blocks"], cache["blocks"])
+        )
+        x = rms_norm(x, params["final_norm"])
+        if cfg.tie_embeddings:
+            logits = x @ params["embed"].T
+        else:
+            logits = x @ params["unembed"]
+        return logits, {"prefix": tuple(new_prefix), "blocks": new_blocks}
+
+
+def _plain_cross_decode(h, p, cfg, cache):
+    """Cross-attention decode against the (small) cached image K/V."""
+    b = h.shape[0]
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (h @ p["wq"]).reshape(b, 1, hq, dh)
+    if cfg.qk_norm:
+        q = qk_head_norm(q, p["q_scale"])
+    k, v = cache["k_img"], cache["v_img"]
+    g = hq // hkv
+    qg = q.reshape(b, 1, hkv, g, dh).astype(jnp.float32) * (dh**-0.5)
+    scores = jnp.einsum("bthgd,bshd->bhgts", qg, k.astype(jnp.float32))
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgts,bshd->bthgd", probs, v.astype(jnp.float32))
+    y = out.reshape(b, 1, hq * dh).astype(h.dtype) @ p["wo"]
+    if "gate" in p:
+        y = jnp.tanh(p["gate"].astype(jnp.float32)).astype(y.dtype) * y
+    return y

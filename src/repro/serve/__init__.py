@@ -1,0 +1,12 @@
+"""Serving layer: prefill + decode step builders and the sharded flash-decode
+attention live in their natural homes; this package re-exports the public
+serving API (see launch/serve.py for the driver)."""
+from repro.models.attention import gqa_flash_decode, mla_flash_decode
+from repro.train.step import make_decode_step, make_prefill_step
+
+__all__ = [
+    "make_prefill_step",
+    "make_decode_step",
+    "gqa_flash_decode",
+    "mla_flash_decode",
+]

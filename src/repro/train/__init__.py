@@ -1,0 +1,12 @@
+from repro.train.optimizer import AdamWState, adamw_init, adamw_update
+from repro.train.schedule import cosine_schedule
+from repro.train.step import make_eval_step, make_train_step
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "cosine_schedule",
+    "make_train_step",
+    "make_eval_step",
+]

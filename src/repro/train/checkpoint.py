@@ -1,0 +1,127 @@
+"""Fault-tolerant checkpointing: atomic, keep-N, mesh-agnostic.
+
+Leaves are written as host numpy arrays (one .npy per leaf inside an .npz)
+with a JSON manifest; the directory is renamed into place atomically so a
+crash mid-write never corrupts the latest checkpoint. Because leaves are
+stored unsharded, restore works under ANY mesh - this is what makes elastic
+re-meshing (launch/elastic.py) trivial: save on 512 devices, restore on 256.
+
+An optional background thread makes saves async (training continues while
+the previous step's state is flushed).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree, keep: int = 3) -> str:
+    os.makedirs(directory, exist_ok=True)
+    name = f"step_{step:010d}"
+    tmp = os.path.join(directory, f".tmp_{name}")
+    final = os.path.join(directory, name)
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    leaves, treedef = _flatten(tree)
+    arrays = {}
+    dtypes = []
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        dtypes.append(str(arr.dtype))
+        if arr.dtype.kind == "V" or arr.dtype.name == "bfloat16":
+            # numpy cannot round-trip ml_dtypes (bf16/fp8): store raw bits
+            arr = arr.view(np.dtype(f"u{arr.dtype.itemsize}"))
+        arrays[f"leaf_{i}"] = arr
+    np.savez(os.path.join(tmp, "leaves.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "num_leaves": len(leaves),
+        "treedef": str(treedef),
+        "dtypes": dtypes,
+        "shapes": [list(np.shape(l)) for l in leaves],
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic publish
+    _gc(directory, keep)
+    return final
+
+
+def _gc(directory: str, keep: int) -> None:
+    ckpts = sorted(
+        d for d in os.listdir(directory) if d.startswith("step_")
+    )
+    for d in ckpts[:-keep]:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    ckpts = sorted(d for d in os.listdir(directory) if d.startswith("step_"))
+    if not ckpts:
+        return None
+    return int(ckpts[-1].split("_")[1])
+
+
+def restore_checkpoint(directory: str, tree_like, step: int | None = None):
+    """Restore into the structure of ``tree_like`` (shapes/dtypes may be
+    abstract); returns (tree, step). Device placement/sharding is applied by
+    the caller (device_put with the current mesh's specs)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    path = os.path.join(directory, f"step_{step:010d}")
+    data = np.load(os.path.join(path, "leaves.npz"))
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves_like, treedef = _flatten(tree_like)
+    leaves = []
+    for i in range(len(leaves_like)):
+        arr = data[f"leaf_{i}"]
+        want = manifest["dtypes"][i]
+        if str(arr.dtype) != want:
+            import ml_dtypes  # ships with jax
+
+            arr = arr.view(np.dtype(getattr(ml_dtypes, want, want)))
+        leaves.append(arr)
+    return jax.tree.unflatten(treedef, leaves), step
+
+
+class AsyncCheckpointer:
+    """Serialises saves on a worker thread; ``wait()`` before exit."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._pending: threading.Thread | None = None
+
+    def save(self, step: int, tree) -> None:
+        self.wait()
+        # materialise on host NOW (so training can mutate device buffers)
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+        self._pending = threading.Thread(
+            target=save_checkpoint,
+            args=(self.directory, step, host_tree, self.keep),
+            daemon=True,
+        )
+        self._pending.start()
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None

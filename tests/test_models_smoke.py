@@ -1,0 +1,146 @@
+"""Per-architecture smoke tests: reduced config, one forward + loss/grad step
+on CPU (1-device mesh), asserting output shapes and no NaNs. Decode smoke for
+causal archs. The FULL configs are exercised only via the dry-run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.configs import ALIASES, get_config, get_reduced_config, cells_for
+from repro.models import Axes, Model
+
+ARCH_IDS = list(ALIASES)
+
+
+def tiny_mesh():
+    return Mesh(
+        np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model")
+    )
+
+
+def make_inputs(cfg, batch=2, seq=16, seed=0):
+    rng = np.random.default_rng(seed)
+    inputs = {}
+    if cfg.frontend == "frames":
+        inputs["frames"] = jnp.asarray(
+            rng.standard_normal((batch, seq, cfg.d_model)), jnp.float32
+        )
+    else:
+        inputs["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32
+        )
+    if cfg.n_img_tokens:
+        inputs["image_embeds"] = jnp.asarray(
+            rng.standard_normal((batch, cfg.n_img_tokens, cfg.d_model)) * 0.02,
+            jnp.float32,
+        )
+    labels = jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32)
+    return inputs, labels
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_counts(arch):
+    cfg = get_config(arch)
+    # sanity: layer count matches the assignment table
+    expected_layers = {
+        "deepseek-v2-236b": 60, "arctic-480b": 35, "deepseek-coder-33b": 62,
+        "minitron-8b": 32, "gemma3-12b": 48, "qwen3-8b": 36,
+        "hubert-xlarge": 48, "llama-3.2-vision-90b": 100,
+        "falcon-mamba-7b": 64, "jamba-v0.1-52b": 32,
+    }[arch]
+    assert cfg.num_layers == expected_layers
+    n = cfg.param_count()
+    assert n > 5e8, f"{arch}: param count {n} implausibly small"
+    assert cfg.active_param_count() <= n
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_grad(arch):
+    cfg = get_reduced_config(arch)
+    mesh = tiny_mesh()
+    model = Model(cfg, Axes(dp=("data",), tp="model"), mesh)
+    params = model.init(jax.random.key(0))
+    inputs, labels = make_inputs(cfg)
+
+    def loss_fn(p):
+        logits, aux = model.forward(p, inputs)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1).mean()
+        return nll + 0.01 * aux
+
+    with jax.set_mesh(mesh):
+        logits, aux = model.forward(params, inputs)
+        b, s = (2, 16)
+        assert logits.shape == (b, s, cfg.vocab_size)
+        assert not np.isnan(np.asarray(logits, np.float32)).any()
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert np.isfinite(float(loss))
+    flat = jax.tree.leaves(grads)
+    assert all(np.isfinite(np.asarray(g, np.float32)).all() for g in flat)
+
+
+@pytest.mark.parametrize(
+    "arch", [a for a in ARCH_IDS if not get_config(a).is_encoder_only]
+)
+def test_smoke_decode(arch):
+    cfg = get_reduced_config(arch)
+    mesh = tiny_mesh()
+    model = Model(cfg, Axes(dp=("data",), tp="model"), mesh)
+    params = model.init(jax.random.key(0))
+    batch, cache_len = 2, 32
+    cache = model.init_cache(batch, cache_len)
+    if cfg.n_img_tokens:
+        rng = np.random.default_rng(0)
+        img = jnp.asarray(
+            rng.standard_normal((batch, cfg.n_img_tokens, cfg.d_model)) * 0.02,
+            jnp.float32,
+        )
+        # prefill image K/V into the cross-attn caches
+        cache = _prefill_image_cache(model, params, cache, img)
+    tok = jnp.zeros((batch, 1), jnp.int32)
+    with jax.set_mesh(mesh):
+        logits, cache2 = model.decode_step(params, cache, tok, jnp.int32(0))
+        logits2, _ = model.decode_step(params, cache2, tok, jnp.int32(1))
+    assert logits.shape == (batch, 1, cfg.vocab_size)
+    assert not np.isnan(np.asarray(logits, np.float32)).any()
+    assert not np.isnan(np.asarray(logits2, np.float32)).any()
+
+
+def _prefill_image_cache(model, params, cache, img):
+    cfg = model.cfg
+    dh = cfg.head_dim
+    hkv = cfg.n_kv_heads
+
+    def fill(spec_list, param_list, cache_list):
+        out = []
+        for spec, p, c in zip(spec_list, param_list, cache_list):
+            if spec.mixer == "cross_attn":
+                k = (img @ p["attn"]["wk"]).reshape(img.shape[0], -1, hkv, dh)
+                v = (img @ p["attn"]["wv"]).reshape(img.shape[0], -1, hkv, dh)
+                c = dict(c, k_img=k.astype(c["k_img"].dtype),
+                         v_img=v.astype(c["v_img"].dtype))
+            out.append(c)
+        return tuple(out)
+
+    new_prefix = fill(cfg.prefix, params["prefix"], cache["prefix"])
+    # blocks: vmap the fill across the stacked leading axis
+    def fill_blocks(bp, bc):
+        return fill(cfg.block, bp, bc)
+
+    new_blocks = jax.vmap(fill_blocks)(params["blocks"], cache["blocks"])
+    return {"prefix": new_prefix, "blocks": new_blocks}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_cells_skip_rules(arch):
+    cells = cells_for(arch)
+    cfg = get_config(arch)
+    if arch == "hubert-xlarge":
+        assert "skip" in cells["decode_32k"] and "skip" in cells["long_500k"]
+    if arch in ("falcon-mamba-7b", "jamba-v0.1-52b", "gemma3-12b"):
+        assert cells["long_500k"] == "run"
+    if arch in ("deepseek-coder-33b", "qwen3-8b", "minitron-8b",
+                "deepseek-v2-236b", "arctic-480b", "llama-3.2-vision-90b"):
+        assert "skip" in cells["long_500k"]
+    assert cells["train_4k"] == "run"

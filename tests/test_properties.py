@@ -1,0 +1,155 @@
+"""Property-based tests (hypothesis) for the system's core invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.buffer import PriorityBuffer
+from repro.core.cuttana import partition as cuttana_partition
+from repro.core.refinement import Refiner, build_subpartition_graph
+from repro.graph import CSRGraph, edge_cut, communication_volume
+from repro.graph.metrics import (
+    check_balance,
+    partition_edge_counts,
+    partition_vertex_counts,
+)
+
+
+# --------------------------------------------------------------- strategies
+@st.composite
+def random_graph(draw, max_n=120, max_m=500):
+    n = draw(st.integers(min_value=4, max_value=max_n))
+    m = draw(st.integers(min_value=1, max_value=max_m))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(seed)
+    edges = rng.integers(0, n, size=(m, 2))
+    return CSRGraph.from_edges(edges, num_vertices=n)
+
+
+@st.composite
+def coarse_instance(draw):
+    kp = draw(st.integers(min_value=4, max_value=40))
+    k = draw(st.integers(min_value=2, max_value=min(kp, 6)))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(seed)
+    w = rng.random((kp, kp)) * (rng.random((kp, kp)) < 0.4)
+    w = np.triu(w, 1)
+    w = w + w.T
+    sub_part = rng.integers(0, k, size=kp)
+    size = rng.random(kp) + 0.25
+    return w, sub_part, size, k
+
+
+# ------------------------------------------------------------------- tests
+@settings(max_examples=25, deadline=None)
+@given(random_graph(), st.integers(min_value=2, max_value=6))
+def test_cuttana_always_total_and_balanced(graph, k):
+    part = cuttana_partition(graph, k, epsilon=0.3, balance_mode="edge", seed=0)
+    assert part.shape == (graph.num_vertices,)
+    assert part.min() >= 0 and part.max() < k
+    ec = partition_edge_counts(graph, part, k)
+    # slack: integer granularity on tiny graphs (one vertex may overshoot by
+    # its degree); the capacity logic still must not blow past cap + max_deg
+    cap = (1 + 0.3) * graph.indices.shape[0] / k
+    max_deg = int(graph.degrees.max()) if graph.num_vertices else 0
+    assert ec.max() <= cap + max_deg + 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(random_graph())
+def test_metrics_bounds(graph):
+    k = 4
+    rng = np.random.default_rng(0)
+    part = rng.integers(0, k, size=graph.num_vertices).astype(np.int32)
+    lam_ec = edge_cut(graph, part)
+    lam_cv = communication_volume(graph, part, k)
+    assert 0.0 <= lam_ec <= 1.0
+    assert 0.0 <= lam_cv <= 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(coarse_instance())
+def test_refinement_invariants(instance):
+    w, sub_part, size, k = instance
+    r = Refiner(w, sub_part, size, k, epsilon=0.4)
+    cut0 = r.current_cut()
+    stats = r.refine()
+    # monotone improvement, internally-consistent bookkeeping, maximality
+    assert r.current_cut() <= cut0 + 1e-9
+    assert abs((cut0 - r.current_cut()) - stats.cut_improvement) < 1e-6
+    r.check_invariants()
+    assert r.best_move(0.0) is None
+
+
+@settings(max_examples=20, deadline=None)
+@given(coarse_instance())
+def test_refinement_never_grows_overloaded_partition(instance):
+    w, sub_part, size, k = instance
+    eps = 0.25
+    total = float(size.sum())
+    cap = (1 + eps) * total / k
+    before = np.bincount(sub_part, weights=size, minlength=k)
+    r = Refiner(w, sub_part, size, k, epsilon=eps, total_mass=total)
+    r.refine()
+    after = np.bincount(r.sub_part, weights=size, minlength=k)
+    for p in range(k):
+        if after[p] > cap + 1e-9:  # was already over cap at input
+            assert after[p] <= before[p] + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.lists(
+        st.tuples(
+            st.integers(min_value=0, max_value=50),  # degree
+            st.integers(min_value=0, max_value=50),  # assigned count
+        ),
+        min_size=1,
+        max_size=40,
+    )
+)
+def test_buffer_pops_in_score_order(entries):
+    buf = PriorityBuffer(capacity=1000, d_max=100, theta=1.0)
+    for i, (deg, assigned) in enumerate(entries):
+        deg = max(deg, assigned, 1)
+        buf.push(i, np.arange(deg), min(assigned, deg))
+    scores = []
+    while len(buf):
+        v, _ = buf.pop_best()
+        scores.append(deg_score(buf, entries, v))
+    assert scores == sorted(scores, reverse=True)
+
+
+def deg_score(buf, entries, v):
+    deg, assigned = entries[v]
+    deg = max(deg, assigned, 1)
+    return deg / buf.d_max + buf.theta * min(assigned, deg) / deg
+
+
+@settings(max_examples=15, deadline=None)
+@given(random_graph(max_n=60, max_m=200), st.integers(min_value=2, max_value=4))
+def test_refinement_reaches_vertex_level_coarse_maximality(graph, k):
+    """After refine(thresh=0), no whole-sub-partition move may improve cut -
+    checked against a brute-force recount on the original graph."""
+    res = cuttana_partition(
+        graph, k, epsilon=0.5, balance_mode="vertex",
+        subparts_per_partition=4, seed=0, return_detail=True,
+    )
+    kp = k * 4
+    w = build_subpartition_graph(graph, res.sub_of, kp)
+    part_of_sub = res.sub_part
+    cut_now = edge_cut(graph, res.part) * graph.num_edges
+    cap = (1 + 0.5) * graph.num_vertices / k
+    loads = np.bincount(
+        part_of_sub, weights=np.bincount(res.sub_of, minlength=kp), minlength=k
+    )
+    sizes = np.bincount(res.sub_of, minlength=kp)
+    for i in range(kp):
+        src = int(part_of_sub[i])
+        for dst in range(k):
+            if dst == src or loads[dst] + sizes[i] > cap + 1e-9:
+                continue
+            trial = part_of_sub.copy()
+            trial[i] = dst
+            new_cut = edge_cut(graph, trial[res.sub_of]) * graph.num_edges
+            assert new_cut >= cut_now - 1e-6, (
+                f"refinement missed improving move <{i},{dst}>"
+            )
