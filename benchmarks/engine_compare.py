@@ -1,0 +1,46 @@
+"""StreamEngine vs the seed per-vertex loops: latency on identical work.
+
+Every pair runs the same partitioner configuration twice - once through the
+unified engine (repro.core.*), once through the preserved seed loop
+(repro.core.legacy) - asserts the partitions are identical (exact mode is
+bit-parity, see tests/test_engine.py), and reports the speedup. The PR's
+acceptance bar is engine-backed FENNEL >= 2x on a >= 100k-vertex graph.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, timed
+from repro.core import legacy
+from repro.core.cuttana import partition as cuttana
+from repro.core.fennel import partition as fennel
+from repro.core.ldg import partition as ldg
+from repro.graph.generators import rmat_graph
+
+
+def run(n: int = 100_000, k: int = 16, avg_degree: float = 16.0, seed: int = 0):
+    g = rmat_graph(n, avg_degree=avg_degree, seed=seed)
+    kw = dict(balance_mode="edge", order="random", seed=seed)
+    pairs = [
+        ("fennel", lambda: fennel(g, k, **kw),
+         lambda: legacy.fennel_partition(g, k, **kw)),
+        ("ldg", lambda: ldg(g, k, **kw),
+         lambda: legacy.ldg_partition(g, k, **kw)),
+        ("cuttana-unbuffered", lambda: cuttana(g, k, use_buffer=False, **kw),
+         lambda: legacy.cuttana_partition(g, k, use_buffer=False, **kw)),
+        ("cuttana", lambda: cuttana(g, k, **kw),
+         lambda: legacy.cuttana_partition(g, k, **kw)),
+    ]
+    rows = []
+    for name, eng_fn, leg_fn in pairs:
+        pe, ue = timed(eng_fn)
+        pl, ul = timed(leg_fn)
+        assert (pe == pl).all(), f"{name}: engine/legacy parity broken"
+        speedup = ul / ue
+        rows.append(dict(algo=name, engine_s=ue / 1e6, legacy_s=ul / 1e6,
+                         speedup=speedup))
+        emit(f"engine_compare/{n}v/{name}", ue,
+             f"legacy_us={ul:.0f},speedup={speedup:.2f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

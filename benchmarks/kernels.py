@@ -25,6 +25,26 @@ def run():
     emit("kernels/partition_score/4096x128xK64", us,
          f"scores_per_s={4096 * 64 / (us / 1e6):.2e}")
 
+    # StreamEngine chunk shape: histogram-only (alpha=0), C=512 x D=128 x K=16
+    # CPU host companion (what the engine dispatches to off-TPU) vs jnp ref
+    from repro.kernels.partition_score.ops import neighbor_histograms_host
+
+    cnbr = rng.integers(-1, 16, size=(512, 128)).astype(np.int32)
+    rows = np.repeat(np.arange(512, dtype=np.int64), 128)
+    flat = cnbr.ravel()
+    _, us = timed(lambda: neighbor_histograms_host(rows, flat, 512, 16), repeats=20)
+    emit("kernels/partition_score/host_hist/512x128xK16", us,
+         f"verts_per_s={512 / (us / 1e6):.2e}")
+    fnh = jax.jit(lambda n, s: fennel_scores(n, s, 0.0, 1.5, use_pallas=False))
+    zs = np.zeros(16, np.float32)
+    fnh(cnbr, zs).block_until_ready()
+    _, us = timed(lambda: fnh(cnbr, zs).block_until_ready(), repeats=20)
+    emit("kernels/partition_score/jnp_hist/512x128xK16", us,
+         f"verts_per_s={512 / (us / 1e6):.2e}")
+    got = np.asarray(fnh(cnbr, zs))
+    want = neighbor_histograms_host(rows, flat, 512, 16)
+    assert np.allclose(got, want), "host histogram != kernel histogram"
+
     # ell_spmv: 65536 rows x 32
     x = rng.random(65537).astype(np.float32)
     cols = rng.integers(0, 65537, size=(65536, 32)).astype(np.int32)

@@ -21,6 +21,7 @@ def main() -> None:
         ablation,
         analytics,
         db,
+        engine_compare,
         imbalance,
         kernels,
         latency,
@@ -44,6 +45,9 @@ def main() -> None:
         "db": db.run,
         "latency": lambda: latency.run(
             dataset="social-s" if not args.full else "social-m"
+        ),
+        "engine": lambda: engine_compare.run(
+            n=30_000 if not args.full else 100_000
         ),
         "kernels": kernels.run,
         "roofline": roofline.run,

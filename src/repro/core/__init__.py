@@ -2,15 +2,29 @@
 
 ``get_partitioner(name)`` returns a callable
 ``fn(graph, k, epsilon=..., balance_mode=..., order=..., seed=...) -> part``.
-Edge partitioners (vertex-cut) live in :mod:`repro.core.hdrf` and return an
-:class:`EdgePartition` via ``get_edge_partitioner``.
+Every streaming partitioner routes its streaming phase through the unified
+:class:`repro.core.engine.StreamEngine`; the seed per-vertex loops survive
+under ``*-legacy`` names (from :mod:`repro.core.legacy`) as parity baselines
+and benchmark reference points. Edge partitioners (vertex-cut) live in
+:mod:`repro.core.hdrf` and return an :class:`EdgePartition` via
+``get_edge_partitioner``.
 """
 from __future__ import annotations
 
-from repro.core import cuttana, fennel, heistream_like, ldg
+from repro.core import cuttana, fennel, heistream_like, ldg, legacy
 from repro.core.base import FennelParams
 from repro.core.cuttana import CuttanaResult, refine_any
 from repro.core.cuttana_batched import partition_batched
+from repro.core.engine import (
+    BufferedPolicy,
+    EngineConfig,
+    FennelScorer,
+    ImmediatePolicy,
+    LDGScorer,
+    PlacementPolicy,
+    Scorer,
+    StreamEngine,
+)
 from repro.core.hdrf import EdgePartition, partition_ginger, partition_hdrf
 from repro.core.random_hash import partition_chunked, partition_hash, partition_random
 
@@ -22,6 +36,7 @@ def _restream(graph, k, **kw):
 
 
 PARTITIONERS = {
+    # engine-backed (canonical)
     "cuttana": cuttana.partition,
     "cuttana-batched": partition_batched,
     "cuttana-restream": _restream,
@@ -31,6 +46,12 @@ PARTITIONERS = {
     "random": partition_random,
     "hash": partition_hash,
     "chunked": partition_chunked,
+    # seed per-vertex reference loops (parity baselines / benchmarks)
+    "cuttana-legacy": legacy.cuttana_partition,
+    "cuttana-batched-legacy": legacy.cuttana_batched_partition,
+    "fennel-legacy": legacy.fennel_partition,
+    "ldg-legacy": legacy.ldg_partition,
+    "heistream-legacy": legacy.heistream_partition,
 }
 
 EDGE_PARTITIONERS = {
@@ -56,4 +77,12 @@ __all__ = [
     "CuttanaResult",
     "EdgePartition",
     "refine_any",
+    "StreamEngine",
+    "EngineConfig",
+    "Scorer",
+    "FennelScorer",
+    "LDGScorer",
+    "PlacementPolicy",
+    "ImmediatePolicy",
+    "BufferedPolicy",
 ]

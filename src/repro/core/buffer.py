@@ -6,7 +6,17 @@ A bounded max-priority queue keyed by the *buffer score* (Eq. 6):
 
 Higher score => evicted (placed) earlier. Score updates (a neighbour got
 assigned) are handled with the classic lazy-heap trick: push a fresh entry and
-invalidate the old one by sequence comparison on pop.
+invalidate the old one by version comparison on pop.
+
+Bookkeeping is array-backed: degree / assigned-count / version / membership
+live in flat numpy arrays indexed by vertex id, so a whole neighbourhood can
+be notified in one vectorised call (:meth:`PriorityBuffer.notify_many`) -
+this is what lets the buffered placement policy in
+:mod:`repro.core.engine` batch its score maintenance. When constructed with
+``graph=``, neighbour lists come straight from the CSR arrays and nothing
+per-vertex is stored outside the flat arrays; without a graph (standalone
+use, e.g. property tests) the neighbour arrays passed to :meth:`push` are
+kept in a side table.
 """
 from __future__ import annotations
 
@@ -16,15 +26,27 @@ import numpy as np
 
 
 class PriorityBuffer:
-    def __init__(self, capacity: int, d_max: int, theta: float = 1.0):
+    def __init__(self, capacity: int, d_max: int, theta: float = 1.0, graph=None):
         self.capacity = int(capacity)
         self.d_max = max(int(d_max), 1)
         self.theta = float(theta)
         self._heap: list[tuple[float, int, int]] = []  # (-score, v, version)
-        self._version: dict[int, int] = {}  # v -> latest version
-        self._nbrs: dict[int, np.ndarray] = {}
-        self._assigned: dict[int, int] = {}
         self._size = 0
+        if graph is not None:
+            self._indptr = graph.indptr
+            self._indices = graph.indices
+            self._nbrs = None
+            n = graph.num_vertices
+            self._deg = np.asarray(graph.degrees, dtype=np.int64)
+        else:
+            self._indptr = None
+            self._indices = None
+            self._nbrs: dict[int, np.ndarray] = {}
+            n = 0
+            self._deg = np.zeros(0, dtype=np.int64)
+        self._assigned = np.zeros(n, dtype=np.int64)
+        self._version = np.zeros(n, dtype=np.int64)
+        self._in = np.zeros(n, dtype=bool)
 
     def __len__(self) -> int:
         return self._size
@@ -33,39 +55,97 @@ class PriorityBuffer:
     def full(self) -> bool:
         return self._size >= self.capacity
 
+    # ------------------------------------------------------------- internals
+    def _grow(self, hi: int) -> None:
+        cur = self._in.shape[0]
+        if hi <= cur:
+            return
+        new = max(hi, 2 * cur, 64)
+        for name in ("_deg", "_assigned", "_version"):
+            old = getattr(self, name)
+            arr = np.zeros(new, dtype=old.dtype)
+            arr[:cur] = old
+            setattr(self, name, arr)
+        arr = np.zeros(new, dtype=bool)
+        arr[:cur] = self._in
+        self._in = arr
+
+    def _neighbors(self, v: int) -> np.ndarray:
+        if self._indptr is not None:
+            return self._indices[self._indptr[v] : self._indptr[v + 1]]
+        return self._nbrs[v]
+
     def score(self, v: int) -> float:
-        deg = self._nbrs[v].shape[0]
-        return deg / self.d_max + self.theta * self._assigned[v] / max(deg, 1)
+        deg = int(self._deg[v])
+        return deg / self.d_max + self.theta * int(self._assigned[v]) / max(deg, 1)
 
     # ------------------------------------------------------------------ ops
-    def push(self, v: int, nbrs: np.ndarray, assigned_count: int) -> None:
-        assert v not in self._nbrs
-        self._nbrs[v] = nbrs
+    def push(self, v: int, nbrs: np.ndarray | None = None, assigned_count: int = 0) -> None:
+        v = int(v)
+        assert not self.contains(v)
+        self._grow(v + 1)
+        if self._indptr is None:
+            assert nbrs is not None, "standalone buffer needs explicit nbrs"
+            self._nbrs[v] = nbrs
+            self._deg[v] = nbrs.shape[0]
+        self._in[v] = True
         self._assigned[v] = int(assigned_count)
-        self._version[v] = 0
-        heapq.heappush(self._heap, (-self.score(v), v, 0))
+        heapq.heappush(self._heap, (-self.score(v), v, int(self._version[v])))
         self._size += 1
 
     def contains(self, v: int) -> bool:
-        return v in self._nbrs
+        return v < self._in.shape[0] and bool(self._in[v])
 
     def notify_assigned(self, v: int) -> bool:
         """A neighbour of buffered ``v`` was placed. Returns True if ``v`` is
         now *complete* (all neighbours assigned) and should be evicted now."""
         self._assigned[v] += 1
-        if self._assigned[v] >= self._nbrs[v].shape[0]:
+        if self._assigned[v] >= self._deg[v]:
             return True
-        ver = self._version[v] + 1
-        self._version[v] = ver
-        heapq.heappush(self._heap, (-self.score(v), v, ver))
+        self._version[v] += 1
+        heapq.heappush(self._heap, (-self.score(v), v, int(self._version[v])))
         return False
 
+    def notify_many(self, vs: np.ndarray) -> list[int]:
+        """Vectorised :meth:`notify_assigned` over a placed vertex's whole
+        neighbourhood. Bumps every buffered vertex in ``vs`` once per
+        occurrence (duplicate entries are possible with ``dedupe=False``
+        graphs); returns the now-complete ones in first-occurrence ``vs``
+        order WITHOUT removing them (the caller cascades)."""
+        if self._size == 0 or vs.size == 0 or self._in.shape[0] == 0:
+            return []
+        vs = vs[vs < self._in.shape[0]]
+        buffered = vs[self._in[vs]]
+        if buffered.size == 0:
+            return []
+        np.add.at(self._assigned, buffered, 1)
+        if buffered.size > 1:
+            buffered = buffered[np.sort(np.unique(buffered, return_index=True)[1])]
+        deg = self._deg[buffered]
+        asg = self._assigned[buffered]
+        complete = asg >= deg
+        live = buffered[~complete]
+        if live.size:
+            self._version[live] += 1
+            ld = deg[~complete]
+            sc = ld / self.d_max + (self.theta * asg[~complete]) / np.maximum(ld, 1)
+            heap = self._heap
+            for s, w, ver in zip(
+                (-sc).tolist(), live.tolist(), self._version[live].tolist()
+            ):
+                heapq.heappush(heap, (s, w, ver))
+        return buffered[complete].tolist()
+
     def remove(self, v: int) -> np.ndarray:
-        """Remove ``v`` (used for complete-eviction); stale heap entries are
-        skipped lazily on pop."""
-        nbrs = self._nbrs.pop(v)
-        del self._assigned[v]
-        del self._version[v]
+        """Remove ``v`` (used for complete-eviction); outstanding heap entries
+        are invalidated by the version bump and skipped lazily on pop."""
+        v = int(v)
+        assert self.contains(v)
+        nbrs = self._neighbors(v)
+        if self._indptr is None:
+            del self._nbrs[v]
+        self._in[v] = False
+        self._version[v] += 1
         self._size -= 1
         return nbrs
 
@@ -73,6 +153,6 @@ class PriorityBuffer:
         """Pop the vertex with the highest buffer score."""
         while self._heap:
             neg, v, ver = heapq.heappop(self._heap)
-            if v in self._nbrs and self._version[v] == ver:
+            if self._in[v] and self._version[v] == ver:
                 return v, self.remove(v)
         raise IndexError("pop from empty buffer")

@@ -8,6 +8,12 @@ score (Eq. 7). Placement of a vertex bumps the buffer score of its buffered
 neighbours; a buffered vertex whose neighbourhood is fully assigned is evicted
 immediately. Every placement also picks a *sub-partition* (Def. 2).
 
+Phase 1 runs through :class:`repro.core.engine.StreamEngine`:
+``use_buffer=True`` selects :class:`~repro.core.engine.BufferedPolicy`
+(Algorithm 1 over the array-backed buffer), ``use_buffer=False`` the chunked
+kernel-backed :class:`~repro.core.engine.ImmediatePolicy`. Both are
+bit-identical to the seed loop kept in :mod:`repro.core.legacy`.
+
 Phase 2: greedy trades on the coarsened sub-partition graph until maximal
 (or early-stopped by ``thresh``), then vertices inherit their sub-partition's
 final partition.
@@ -19,17 +25,17 @@ import time
 
 import numpy as np
 
-from repro.core.base import (
-    FennelParams,
-    PartitionState,
-    finalize,
-    make_fennel_score,
+from repro.core.base import FennelParams, PartitionState, finalize
+from repro.core.engine import (
+    BufferedPolicy,
+    EngineConfig,
+    FennelScorer,
+    ImmediatePolicy,
+    StreamEngine,
 )
-from repro.core.buffer import PriorityBuffer
 from repro.core.refinement import Refiner, build_subpartition_graph
 from repro.core.subpartition import SubPartitioner
 from repro.graph.csr import CSRGraph
-from repro.graph.stream import stream_order
 
 
 @dataclasses.dataclass
@@ -60,6 +66,9 @@ def partition(
     order: str = "natural",
     seed: int = 0,
     return_detail: bool = False,
+    chunk: int = 512,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
 ):
     """Full CUTTANA partitioner. Ablations: ``use_buffer=False`` /
     ``use_refinement=False`` reproduce the paper's Table III rows
@@ -74,7 +83,6 @@ def partition(
 
     params = fennel_params or FennelParams(hybrid=(balance_mode == "edge"))
     state = PartitionState.create(graph, k, epsilon, balance_mode, seed)
-    score_fn = make_fennel_score(graph, k, params, balance_mode)
     subp = SubPartitioner(
         graph,
         k,
@@ -83,50 +91,25 @@ def partition(
         balance_mode=balance_mode,
         seed=seed,
     )
-    indptr, indices = graph.indptr, graph.indices
-    buf = PriorityBuffer(max_qsize, d_max, theta)
-
-    def place(v: int, nbrs: np.ndarray) -> None:
-        """partitionVertex (Algorithm 1 line 15): place + sub-place + notify."""
-        worklist = [(v, nbrs)]
-        while worklist:
-            u, un = worklist.pop()
-            hist = state.neighbor_histogram(un)
-            scores = score_fn(state, hist)
-            allowed = ~state.would_overflow(un.size)
-            p = state.argmax_tiebreak(scores, allowed)
-            state.assign(u, p, un.size)
-            subp.assign(u, p, un, un.size)
-            # bump buffered neighbours; fully-known ones are placed right away
-            for w in un:
-                wi = int(w)
-                if buf.contains(wi) and buf.notify_assigned(wi):
-                    worklist.append((wi, buf.remove(wi)))
-
+    policy = (
+        BufferedPolicy(max_qsize, d_max, theta)
+        if use_buffer
+        else ImmediatePolicy()
+    )
+    # t0 before engine construction: StreamEngine computes stream_order there,
+    # which the seed loop counted inside phase 1
     t0 = time.perf_counter()
-    if not use_buffer:
-        for v in stream_order(graph, order, seed):
-            place(int(v), indices[indptr[v] : indptr[v + 1]])
-    else:
-        for v in stream_order(graph, order, seed):
-            v = int(v)
-            if state.part_of[v] != -1:
-                continue  # already placed via complete-eviction cascade
-            nbrs = indices[indptr[v] : indptr[v + 1]]
-            if nbrs.size >= d_max:
-                place(v, nbrs)
-                continue
-            assigned = int((state.part_of[nbrs] != -1).sum())
-            if assigned == nbrs.size and nbrs.size > 0:
-                place(v, nbrs)  # complete already
-                continue
-            buf.push(v, nbrs, assigned)
-            if buf.full:
-                u, un = buf.pop_best()
-                place(u, un)
-        while len(buf):
-            u, un = buf.pop_best()
-            place(u, un)
+    engine = StreamEngine(
+        graph,
+        state,
+        FennelScorer(graph, k, params, balance_mode),
+        policy,
+        subpartitioner=subp,
+        order=order,
+        seed=seed,
+        config=EngineConfig(chunk=chunk, use_pallas=use_pallas, interpret=interpret),
+    )
+    engine.run()
     phase1_s = time.perf_counter() - t0
 
     part = finalize(state)

@@ -13,6 +13,10 @@ High-degree vertices (> ``sample_cap`` neighbours) are scored on a uniform
 neighbour sample with the histogram rescaled - Thm. 1 says exact counts
 matter least exactly for them.
 
+This is now a thin configuration of :class:`repro.core.engine.StreamEngine`
+(``ImmediatePolicy`` with ``exact=False``); the seed loop is kept in
+:mod:`repro.core.legacy` and parity-tested against this wrapper.
+
 Phase 2 (refinement) is unchanged - it is already graph-size independent.
 """
 from __future__ import annotations
@@ -20,11 +24,10 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.base import FennelParams, PartitionState, finalize
+from repro.core.engine import EngineConfig, FennelScorer, ImmediatePolicy, StreamEngine
 from repro.core.refinement import Refiner, build_subpartition_graph
 from repro.core.subpartition import SubPartitioner
 from repro.graph.csr import CSRGraph
-from repro.graph.stream import stream_order
-from repro.kernels.partition_score.ops import fennel_scores
 
 
 def partition_batched(
@@ -43,7 +46,6 @@ def partition_batched(
     interpret: bool = False,
 ) -> np.ndarray:
     n = graph.num_vertices
-    m = max(graph.num_edges, 1)
     state = PartitionState.create(graph, k, epsilon, balance_mode, seed)
     if subparts_per_partition is None:
         subparts_per_partition = int(max(8, min(4096, n // (8 * k))))
@@ -52,53 +54,23 @@ def partition_batched(
         epsilon=max(epsilon, 0.10), balance_mode=balance_mode, seed=seed,
     )
     params = FennelParams(hybrid=(balance_mode == "edge"))
-    alpha = params.alpha_scale * np.sqrt(k) * m / (max(n, 1) ** 1.5)
-    gamma = params.gamma
-    mu = n / max(graph.indices.shape[0], 1)
-    rng = np.random.default_rng(seed)
-    indptr, indices = graph.indptr, graph.indices
-    ids = stream_order(graph, order, seed)
-
-    for start in range(0, n, chunk):
-        batch = ids[start : start + chunk]
-        c = len(batch)
-        degs = (indptr[batch + 1] - indptr[batch]).astype(np.int64)
-        width = int(min(max(degs.max(), 1), sample_cap))
-        nbr_parts = np.full((c, width), -1, dtype=np.int32)
-        scale = np.ones(c, dtype=np.float64)
-        nbr_cache: list[np.ndarray] = []
-        for i, v in enumerate(batch):
-            nb = indices[indptr[v] : indptr[v + 1]]
-            nbr_cache.append(nb)
-            if nb.size > width:  # degree-capped sampling (Thm. 1 regime)
-                sel = rng.choice(nb.size, size=width, replace=False)
-                nbp = state.part_of[nb[sel]]
-                scale[i] = nb.size / width
-            else:
-                nbp = state.part_of[nb]
-            nbr_parts[i, : nbp.size] = nbp
-        # one fused kernel call scores the whole chunk (histogram part)
-        sizes = np.zeros(k, np.float32)  # penalty applied on host (fresh)
-        hist = np.asarray(
-            fennel_scores(
-                nbr_parts, sizes, 0.0, gamma,
-                use_pallas=use_pallas, interpret=interpret,
-            ),
-            dtype=np.float64,
-        ) * scale[:, None]
-        # host loop: fresh penalty + capacity, stale-by-chunk histograms
-        for i, v in enumerate(batch):
-            if params.hybrid:
-                size = 0.5 * (state.v_counts + mu * state.e_counts)
-            else:
-                size = state.v_counts
-            scores = hist[i] - alpha * gamma * np.power(
-                np.maximum(size, 0.0), gamma - 1.0
-            )
-            allowed = ~state.would_overflow(int(degs[i]))
-            p = state.argmax_tiebreak(scores, allowed)
-            state.assign(int(v), p, int(degs[i]))
-            subp.assign(int(v), p, nbr_cache[i], int(degs[i]))
+    engine = StreamEngine(
+        graph,
+        state,
+        FennelScorer(graph, k, params, balance_mode),
+        ImmediatePolicy(),
+        subpartitioner=subp,
+        order=order,
+        seed=seed,
+        config=EngineConfig(
+            chunk=chunk,
+            sample_cap=sample_cap,
+            exact=False,
+            use_pallas=use_pallas,
+            interpret=interpret,
+        ),
+    )
+    engine.run()
 
     part = finalize(state)
     if use_refinement and k > 1:

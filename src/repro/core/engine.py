@@ -1,0 +1,629 @@
+"""Unified batched streaming engine: one scoring core for every partitioner.
+
+Every streaming vertex partitioner in this repo is "a stream loop + a scoring
+rule + a placement discipline" (paper §III-A; cf. Faraj & Schulz's buffered
+streaming framing). :class:`StreamEngine` factors that shape into a single
+hot path:
+
+* the stream is consumed in chunks of ``C`` vertices; all ``C x K``
+  assigned-neighbour histograms for a chunk come from ONE call to the fused
+  :mod:`repro.kernels.partition_score` kernel (Pallas on TPU, jnp reference
+  elsewhere) instead of a per-vertex ``bincount``;
+* a light host loop applies assignments in stream order. In ``exact`` mode
+  the chunk histograms are incrementally corrected as in-chunk neighbours
+  get assigned, so results are *bit-identical* to the classic per-vertex
+  loops preserved in :mod:`repro.core.legacy` (parity-tested in
+  ``tests/test_engine.py``). With ``exact=False`` histograms are left
+  one-chunk stale (bulk-synchronous relaxation) and vertices above
+  ``sample_cap`` neighbours are scored on a uniform sample with the
+  histogram rescaled - the ``cuttana-batched`` speed/quality trade;
+* scoring rules are pluggable :class:`Scorer` objects (FENNEL vertex /
+  FENNEL-PowerLyra hybrid Eq. 7, LDG) that keep their balance penalty
+  incrementally updated instead of recomputing a K-wide ``power`` per
+  vertex;
+* placement disciplines are pluggable :class:`PlacementPolicy` objects:
+  :class:`ImmediatePolicy` (FENNEL / LDG / HeiStream batches / restream
+  reassignment) or :class:`BufferedPolicy` - CUTTANA Algorithm 1 with the
+  D_max bypass and the complete-eviction cascade, backed by the array-based
+  :class:`~repro.core.buffer.PriorityBuffer`.
+
+Extension points: implement ``Scorer`` for a new scoring rule (e.g. a
+weighted-affinity variant) or ``PlacementPolicy`` for a new placement
+discipline and wire them into a thin ``partition()`` wrapper - see
+``src/repro/core/README.md``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core.base import FennelParams, PartitionState
+from repro.core.buffer import PriorityBuffer
+from repro.core.subpartition import SubPartitioner
+from repro.graph.csr import CSRGraph
+from repro.graph.stream import stream_order
+from repro.kernels.partition_score.ops import (
+    fennel_scores,
+    kernel_active,
+    neighbor_histograms_host,
+)
+
+# widest dense neighbour axis a kernel call may use in exact mode; rows with
+# higher degree are histogrammed exactly on host instead (Thm. 1 hubs are
+# rare per chunk, so this bounds memory without sampling)
+_EXACT_KERNEL_WIDTH = 1024
+
+__all__ = [
+    "Scorer",
+    "FennelScorer",
+    "LDGScorer",
+    "PlacementPolicy",
+    "ImmediatePolicy",
+    "BufferedPolicy",
+    "EngineConfig",
+    "StreamEngine",
+]
+
+
+# ------------------------------------------------------------------ scorers
+@runtime_checkable
+class Scorer(Protocol):
+    """Per-vertex scoring rule. ``scores`` is called once per placement with
+    the vertex's assigned-neighbour histogram; implementations may cache the
+    balance penalty and must keep it fresh through ``on_assign`` /
+    ``on_unassign`` (every mass mutation the engine makes flows through
+    these; if outside code mutates the state - e.g. an FM pass - call
+    ``begin`` again)."""
+
+    def begin(self, state: PartitionState) -> None: ...
+
+    def scores(self, state: PartitionState, hist: np.ndarray) -> np.ndarray: ...
+
+    def on_assign(self, state: PartitionState, p: int, deg: int) -> None: ...
+
+    def on_unassign(self, state: PartitionState, p: int, deg: int) -> None: ...
+
+
+class FennelScorer:
+    """FENNEL Eq. 7: ``hist_i - alpha*gamma*size_i^(gamma-1)`` with
+    ``size_i = |V_i|`` (vertex mode) or the PowerLyra hybrid mass
+    ``(|V_i| + mu*E_i)/2`` (edge mode, ``params.hybrid``). Identical numbers
+    to :func:`repro.core.base.make_fennel_score`, but the K-wide penalty is
+    cached and only the assigned partition's entry is recomputed per
+    placement."""
+
+    def __init__(
+        self,
+        graph: CSRGraph,
+        k: int,
+        params: FennelParams | None = None,
+        balance_mode: str = "vertex",
+    ):
+        params = params or FennelParams()
+        n = max(graph.num_vertices, 1)
+        m = max(graph.num_edges, 1)
+        self.alpha = params.alpha_scale * np.sqrt(k) * m / (n**1.5)
+        self.gamma = params.gamma
+        self.mu = n / max(graph.indices.shape[0], 1)
+        self.hybrid = params.hybrid and balance_mode == "edge"
+        self._penalty: np.ndarray | None = None
+        self._ag = float(self.alpha * self.gamma)
+        self._gm1 = self.gamma - 1.0
+
+    def begin(self, state: PartitionState) -> None:
+        if self.hybrid:
+            size = 0.5 * (state.v_counts + self.mu * state.e_counts)
+        else:
+            size = state.v_counts
+        self._penalty = self.alpha * self.gamma * np.power(
+            np.maximum(size, 0.0), self.gamma - 1.0
+        )
+
+    def scores(self, state: PartitionState, hist: np.ndarray) -> np.ndarray:
+        return hist - self._penalty
+
+    def _update(self, state: PartitionState, p: int) -> None:
+        if self.hybrid:
+            size = 0.5 * (state.v_counts[p] + self.mu * state.e_counts[p])
+        else:
+            size = state.v_counts[p]
+        self._penalty[p] = self.alpha * self.gamma * np.power(
+            np.maximum(size, 0.0), self.gamma - 1.0
+        )
+
+    def on_assign(self, state: PartitionState, p: int, deg: int) -> None:
+        self._update(state, p)
+
+    def on_unassign(self, state: PartitionState, p: int, deg: int) -> None:
+        self._update(state, p)
+
+    # ------------------------------------------------------ affine fast path
+    def affine(self, state: PartitionState):
+        """scores == hist * mul + add (mul None => 1). See ImmediatePolicy."""
+        self.begin(state)
+        return None, -self._penalty
+
+    def affine_update(self, v_p: float, e_p: float):
+        """New (mul_p, add_p) after partition p's counts became (v_p, e_p).
+        Pure-python IEEE doubles: same values as the numpy path bit-for-bit
+        (``x ** y`` and ``np.power`` both call libm ``pow``)."""
+        if self.hybrid:
+            size = 0.5 * (v_p + self.mu * e_p)
+        else:
+            size = v_p
+        if size < 0.0:
+            size = 0.0
+        return None, -(self._ag * size**self._gm1)
+
+
+class LDGScorer:
+    """Linear Deterministic Greedy: ``hist_i * max(1 - size_i/C, 0)`` with a
+    tiny negative load term for least-loaded tie-breaking (identical numbers
+    to the seed :mod:`repro.core.ldg` loop)."""
+
+    def __init__(self, graph: CSRGraph, k: int, balance_mode: str = "vertex"):
+        self.balance_mode = balance_mode
+        self._factor: np.ndarray | None = None
+        self._cap = 0.0
+
+    def _loads(self, state: PartitionState) -> np.ndarray:
+        return state.v_counts if self.balance_mode == "vertex" else state.e_counts
+
+    def begin(self, state: PartitionState) -> None:
+        self._cap = (
+            state.vertex_capacity
+            if self.balance_mode == "vertex"
+            else state.edge_capacity
+        )
+        self._factor = np.maximum(1.0 - self._loads(state) / self._cap, 0.0)
+
+    def scores(self, state: PartitionState, hist: np.ndarray) -> np.ndarray:
+        return hist * self._factor - 1e-9 * self._loads(state)
+
+    def _update(self, state: PartitionState, p: int) -> None:
+        self._factor[p] = np.maximum(1.0 - self._loads(state)[p] / self._cap, 0.0)
+
+    def on_assign(self, state: PartitionState, p: int, deg: int) -> None:
+        self._update(state, p)
+
+    def on_unassign(self, state: PartitionState, p: int, deg: int) -> None:
+        self._update(state, p)
+
+    # ------------------------------------------------------ affine fast path
+    def affine(self, state: PartitionState):
+        self.begin(state)
+        return self._factor, -(1e-9 * self._loads(state))
+
+    def affine_update(self, v_p: float, e_p: float):
+        lp = v_p if self.balance_mode == "vertex" else e_p
+        f = 1.0 - lp / self._cap
+        if f < 0.0:
+            f = 0.0
+        return f, -(1e-9 * lp)
+
+
+# ------------------------------------------------------------------- config
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Chunking/kernel knobs for the scoring core.
+
+    ``exact=True``: in-chunk histogram corrections, no sampling - results
+    match the sequential per-vertex loops bit-for-bit. ``exact=False``:
+    histograms stale by one chunk, degree-capped sampling above
+    ``sample_cap`` (only honoured in this mode)."""
+
+    chunk: int = 512
+    sample_cap: int = 512
+    exact: bool = True
+    use_pallas: bool | None = None
+    interpret: bool = False
+
+
+# ----------------------------------------------------------------- policies
+@runtime_checkable
+class PlacementPolicy(Protocol):
+    def run(self, engine: "StreamEngine") -> None: ...
+
+
+class ImmediatePolicy:
+    """Place every stream vertex as soon as it arrives (FENNEL/LDG/HeiStream
+    greedy phase). With ``reassign=True`` the stream *re-visits* already
+    assigned vertices (restreaming): each vertex is pulled out of its current
+    partition, rescored against the full assignment, and may move."""
+
+    def __init__(self, reassign: bool = False):
+        self.reassign = reassign
+
+    def run(self, eng: "StreamEngine") -> None:
+        if self.reassign and eng.subp is not None:
+            # SubPartitioner has no unassign: re-adding an already-placed
+            # vertex would double-count its sub-partition mass
+            raise ValueError("reassign mode does not support a subpartitioner")
+        if hasattr(eng.scorer, "affine"):
+            self._run_affine(eng)
+        else:
+            self._run_generic(eng)
+
+    # ------------------------------------------------- generic scorer path
+    def _run_generic(self, eng: "StreamEngine") -> None:
+        """Protocol-only path for custom scorers: per-vertex numpy scoring."""
+        cfg = eng.config
+        state = eng.state
+        scorer = eng.scorer
+        subp = eng.subp
+        indptr, indices = eng.graph.indptr, eng.graph.indices
+        ids = eng.ids
+        part_of = state.part_of
+        v_counts, e_counts = state.v_counts, state.e_counts
+        reassign = self.reassign
+        for start in range(0, ids.shape[0], cfg.chunk):
+            batch = ids[start : start + cfg.chunk]
+            degs = (indptr[batch + 1] - indptr[batch]).astype(np.int64)
+            nbr_views = [indices[indptr[v] : indptr[v + 1]] for v in batch]
+            hist, corr = eng.chunk_histograms(batch, degs, nbr_views)
+            bl = batch.tolist()
+            dl = degs.tolist()
+            for i in range(len(bl)):
+                v, deg = bl[i], dl[i]
+                if reassign:
+                    cur = int(part_of[v])
+                    v_counts[cur] -= 1
+                    e_counts[cur] -= deg
+                    scorer.on_unassign(state, cur, deg)
+                s = scorer.scores(state, hist[i])
+                allowed = ~state.would_overflow(deg)
+                if reassign:
+                    allowed[cur] = True
+                p = state.argmax_tiebreak(s, allowed)
+                if reassign:
+                    part_of[v] = p
+                    v_counts[p] += 1
+                    e_counts[p] += deg
+                    scorer.on_assign(state, p, deg)
+                    if corr is not None and p != cur:
+                        dst, starts = corr
+                        for j in dst[starts[i] : starts[i + 1]]:
+                            hist[j, cur] -= 1.0
+                            hist[j, p] += 1.0
+                else:
+                    state.assign(v, p, deg)
+                    scorer.on_assign(state, p, deg)
+                    if subp is not None:
+                        subp.assign(v, p, nbr_views[i], deg)
+                    if corr is not None:
+                        dst, starts = corr
+                        for j in dst[starts[i] : starts[i + 1]]:
+                            hist[j, p] += 1.0
+            if eng.on_chunk_end is not None:
+                eng.on_chunk_end(eng, batch, nbr_views)
+
+    # ------------------------------------------------- affine scorer path
+    def _run_affine(self, eng: "StreamEngine") -> None:
+        """Fast host loop for scorers exposing the affine contract
+        ``scores == hist * mul + add``. The K-wide selection runs in plain
+        Python over lists (for K <= a few hundred, numpy dispatch overhead
+        dwarfs the arithmetic); canonical numpy state is written back once
+        per chunk. Every operation is the same IEEE double computation as
+        the generic path, so results stay bit-identical - parity-tested
+        against :mod:`repro.core.legacy`."""
+        cfg = eng.config
+        state = eng.state
+        scorer = eng.scorer
+        subp = eng.subp
+        indptr, indices = eng.graph.indptr, eng.graph.indices
+        ids = eng.ids
+        part_of = state.part_of
+        v_counts, e_counts = state.v_counts, state.e_counts
+        reassign = self.reassign
+        k = state.k
+        krange = range(k)
+        rng = state.rng
+        vertex_mode = state.balance_mode == "vertex"
+        cap = state.vertex_capacity if vertex_mode else state.edge_capacity
+        neg_inf = float("-inf")
+        sc = [neg_inf] * k  # per-vertex score buffer (neg_inf == disallowed)
+        for start in range(0, ids.shape[0], cfg.chunk):
+            batch = ids[start : start + cfg.chunk]
+            degs = (indptr[batch + 1] - indptr[batch]).astype(np.int64)
+            nbr_views = (
+                [indices[indptr[v] : indptr[v + 1]] for v in batch]
+                if subp is not None or eng.on_chunk_end is not None
+                else None
+            )
+            hist, corr = eng.chunk_histograms(batch, degs, nbr_views)
+            H = hist.tolist()
+            bl = batch.tolist()
+            dl = degs.tolist()
+            assigned = [0] * len(bl)
+            # python mirrors of the balance state; canonical arrays are
+            # flushed at chunk end (before any on_chunk_end hook), so hooks
+            # may mutate state freely - affine() re-syncs next chunk
+            mul_a, add_a = scorer.affine(state)
+            mul = None if mul_a is None else mul_a.tolist()
+            add = add_a.tolist()
+            v_list = v_counts.tolist()
+            e_list = e_counts.tolist()
+            load = v_list if vertex_mode else e_list
+            for i in range(len(bl)):
+                v, deg = bl[i], dl[i]
+                cur = -1
+                if reassign:
+                    cur = int(part_of[v])  # pre-pass value: writes deferred
+                    v_list[cur] -= 1
+                    e_list[cur] -= deg
+                    u = scorer.affine_update(v_list[cur], e_list[cur])
+                    if mul is not None:
+                        mul[cur] = u[0]
+                    add[cur] = u[1]
+                row = H[i]
+                inc = 1 if vertex_mode else deg
+                best = neg_inf
+                if mul is None:
+                    for p in krange:
+                        if load[p] + inc > cap and p != cur:
+                            sc[p] = neg_inf
+                            continue
+                        s = row[p] + add[p]
+                        sc[p] = s
+                        if s > best:
+                            best = s
+                else:
+                    for p in krange:
+                        if load[p] + inc > cap and p != cur:
+                            sc[p] = neg_inf
+                            continue
+                        s = row[p] * mul[p] + add[p]
+                        sc[p] = s
+                        if s > best:
+                            best = s
+                if best == neg_inf:
+                    # every partition at capacity - least-loaded fallback,
+                    # same rule as PartitionState.argmax_tiebreak
+                    p = load.index(min(load))
+                else:
+                    thr = best - 1e-12
+                    ties = [p for p in krange if sc[p] >= thr]
+                    p = ties[0] if len(ties) == 1 else int(ties[rng.integers(len(ties))])
+                assigned[i] = p
+                v_list[p] += 1
+                e_list[p] += deg
+                u = scorer.affine_update(v_list[p], e_list[p])
+                if mul is not None:
+                    mul[p] = u[0]
+                add[p] = u[1]
+                if subp is not None:
+                    subp.assign(v, p, nbr_views[i], deg)
+                if corr is not None and p != cur:
+                    dst, starts = corr
+                    if reassign:
+                        for j in dst[starts[i] : starts[i + 1]]:
+                            rj = H[j]
+                            rj[cur] -= 1.0
+                            rj[p] += 1.0
+                    else:
+                        for j in dst[starts[i] : starts[i + 1]]:
+                            H[j][p] += 1.0
+            # flush deferred writes back into the canonical numpy state
+            part_of[batch] = assigned
+            v_counts[:] = v_list
+            e_counts[:] = e_list
+            if eng.on_chunk_end is not None:
+                eng.on_chunk_end(eng, batch, nbr_views)
+
+
+class BufferedPolicy:
+    """CUTTANA Algorithm 1: vertices with degree >= D_max are placed
+    immediately (Thm. 1); the rest enter the bounded priority buffer; on
+    overflow the best-scored vertex is evicted and placed; placements bump
+    buffered neighbours (vectorised through ``notify_many``) and fully-known
+    vertices cascade out immediately."""
+
+    def __init__(self, max_qsize: int, d_max: int, theta: float = 1.0):
+        self.max_qsize = int(max_qsize)
+        self.d_max = max(int(d_max), 1)
+        self.theta = float(theta)
+        self.buffer: PriorityBuffer | None = None
+
+    def run(self, eng: "StreamEngine") -> None:
+        state = eng.state
+        indptr, indices = eng.graph.indptr, eng.graph.indices
+        buf = PriorityBuffer(self.max_qsize, self.d_max, self.theta, graph=eng.graph)
+        self.buffer = buf
+        part_of = state.part_of
+        d_max = self.d_max
+
+        def cascade(v: int, nbrs: np.ndarray) -> None:
+            worklist = [(v, nbrs)]
+            while worklist:
+                u, un = worklist.pop()
+                eng.place(u, un)
+                for w in buf.notify_many(un):
+                    worklist.append((w, buf.remove(w)))
+
+        for v in eng.ids:
+            v = int(v)
+            if part_of[v] != -1:
+                continue  # already placed via complete-eviction cascade
+            nbrs = indices[indptr[v] : indptr[v + 1]]
+            if nbrs.size >= d_max:
+                cascade(v, nbrs)
+                continue
+            assigned = int((part_of[nbrs] != -1).sum())
+            if assigned == nbrs.size and nbrs.size > 0:
+                cascade(v, nbrs)  # complete already
+                continue
+            buf.push(v, nbrs, assigned)
+            if buf.full:
+                u, un = buf.pop_best()
+                cascade(u, un)
+        while len(buf):
+            u, un = buf.pop_best()
+            cascade(u, un)
+
+
+# ------------------------------------------------------------------- engine
+class StreamEngine:
+    """Drives one streaming pass: ``scorer.begin`` then ``policy.run``.
+
+    ``ids`` overrides the stream order (otherwise computed from
+    ``order``/``seed``); ``subpartitioner`` hooks CUTTANA's Def. 2
+    sub-placement into every commit; ``on_chunk_end(engine, batch,
+    nbr_views)`` runs after each chunk in immediate mode (HeiStream's FM
+    refinement uses it - mutate state there, then call
+    ``engine.scorer.begin(engine.state)`` to refresh the penalty cache)."""
+
+    def __init__(
+        self,
+        graph: CSRGraph,
+        state: PartitionState,
+        scorer: Scorer,
+        policy: PlacementPolicy,
+        *,
+        subpartitioner: SubPartitioner | None = None,
+        order: str = "natural",
+        seed: int = 0,
+        ids: np.ndarray | None = None,
+        config: EngineConfig | None = None,
+        on_chunk_end: Callable[["StreamEngine", np.ndarray, list], None] | None = None,
+    ):
+        self.graph = graph
+        self.state = state
+        self.scorer = scorer
+        self.policy = policy
+        self.subp = subpartitioner
+        self.config = config or EngineConfig()
+        self.ids = stream_order(graph, order, seed) if ids is None else ids
+        self.on_chunk_end = on_chunk_end
+        self._sample_rng = np.random.default_rng(seed)
+        self._pos = np.full(graph.num_vertices, -1, dtype=np.int64)
+        self._zero_sizes = np.zeros(state.k, dtype=np.float32)
+        self._use_kernel = kernel_active(self.config.use_pallas, self.config.interpret)
+
+    def run(self) -> PartitionState:
+        self.scorer.begin(self.state)
+        self.policy.run(self)
+        return self.state
+
+    # ------------------------------------------------- per-vertex placement
+    def place(self, v: int, nbrs: np.ndarray) -> int:
+        """Score + place one vertex against the *fresh* state (used by the
+        buffered policy, whose placement order is data-dependent)."""
+        state = self.state
+        hist = state.neighbor_histogram(nbrs)
+        scores = self.scorer.scores(state, hist)
+        allowed = ~state.would_overflow(nbrs.size)
+        p = state.argmax_tiebreak(scores, allowed)
+        state.assign(v, p, nbrs.size)
+        self.scorer.on_assign(state, p, nbrs.size)
+        if self.subp is not None:
+            self.subp.assign(v, p, nbrs, nbrs.size)
+        return p
+
+    # --------------------------------------------------- chunked histograms
+    def chunk_histograms(
+        self,
+        batch: np.ndarray,
+        degs: np.ndarray,
+        nbr_views: list[np.ndarray] | None = None,
+    ):
+        """All C x K assigned-neighbour histograms for a chunk via one fused
+        kernel call.
+
+        Returns ``(hist float64[C, K], corr)`` where ``corr`` is ``None`` in
+        stale mode, else ``(dst, starts)``: for chunk position ``i``,
+        ``dst[starts[i]:starts[i+1]]`` lists the later chunk positions that
+        have ``batch[i]`` as a neighbour - the rows to bump when ``batch[i]``
+        is assigned (the stale-histogram correction that makes exact mode
+        bit-identical to the sequential loops)."""
+        cfg = self.config
+        state = self.state
+        c = batch.shape[0]
+        if c == 0:
+            return np.zeros((0, state.k), dtype=np.float64), None
+        max_deg = int(degs.max())
+        w = max(max_deg, 1)
+        if not cfg.exact:
+            w = min(w, cfg.sample_cap)
+        indptr, indices = self.graph.indptr, self.graph.indices
+        rows = np.repeat(np.arange(c, dtype=np.int64), degs)
+        offs = np.zeros(c, dtype=np.int64)
+        np.cumsum(degs[:-1], out=offs[1:])
+        idx_in_row = np.arange(rows.shape[0], dtype=np.int64) - offs[rows]
+        cols = indices[np.repeat(indptr[batch], degs) + idx_in_row]
+        part_of = state.part_of
+        scale = None
+        sampled: list[tuple[int, np.ndarray]] = []
+        if not cfg.exact and max_deg > w:
+            scale = np.ones(c, dtype=np.float64)
+            for i in np.flatnonzero(degs > w):
+                # degree-capped sampling (Thm. 1 regime): exact counts matter
+                # least for exactly these vertices
+                if nbr_views is not None:
+                    nb = nbr_views[i]
+                else:
+                    v = batch[i]
+                    nb = indices[indptr[v] : indptr[v + 1]]
+                sel = self._sample_rng.choice(nb.size, size=w, replace=False)
+                sampled.append((int(i), part_of[nb[sel]]))
+                scale[i] = nb.size / w
+        if self._use_kernel:
+            kw = w
+            over: np.ndarray | None = None
+            if cfg.exact and kw > _EXACT_KERNEL_WIDTH:
+                # bound the dense [C, width] matrix: power-law hubs would
+                # otherwise blow it up (one degree-500k vertex => ~1 GB).
+                # The few over-width rows get exact host histograms below.
+                kw = _EXACT_KERNEL_WIDTH
+                over = np.flatnonzero(degs > kw)
+            # pad the neighbour axis to a power of two >= 8 so kernel shapes
+            # stay stable across chunks (padding is -1 and never counted)
+            width = max(8, 1 << (kw - 1).bit_length())
+            nbr_parts = np.full((c, width), -1, dtype=np.int32)
+            if sampled or over is not None:
+                fmask = (degs <= kw)[rows]
+                nbr_parts[rows[fmask], idx_in_row[fmask]] = part_of[cols[fmask]]
+                for i, nbp in sampled:
+                    nbr_parts[i, :kw] = nbp
+            else:
+                nbr_parts[rows, idx_in_row] = part_of[cols]
+            hist = np.asarray(
+                fennel_scores(
+                    nbr_parts, self._zero_sizes, 0.0, 1.5,
+                    use_pallas=cfg.use_pallas, interpret=cfg.interpret,
+                ),
+                dtype=np.float64,
+            )
+            if over is not None:
+                for i in over.tolist():
+                    v = batch[i]
+                    nbp = part_of[indices[indptr[v] : indptr[v + 1]]]
+                    hist[i] = np.bincount(nbp[nbp >= 0], minlength=state.k)
+        else:
+            # CPU: flat bincount companion of the kernel, identical counts
+            if sampled:
+                fmask = (degs <= w)[rows]
+                hist = neighbor_histograms_host(
+                    rows[fmask], part_of[cols[fmask]], c, state.k
+                )
+                for i, nbp in sampled:
+                    hist[i] = np.bincount(nbp[nbp >= 0], minlength=state.k)
+            else:
+                hist = neighbor_histograms_host(rows, part_of[cols], c, state.k)
+        if scale is not None:
+            hist *= scale[:, None]
+        corr = None
+        if cfg.exact:
+            pos = self._pos
+            pos[batch] = np.arange(c, dtype=np.int64)
+            cpos = pos[cols]
+            emask = (cpos >= 0) & (cpos < rows)
+            pos[batch] = -1
+            src = cpos[emask]
+            dst = rows[emask]
+            o = np.argsort(src, kind="stable")
+            src, dst = src[o], dst[o]
+            starts = np.searchsorted(src, np.arange(c + 1)).tolist()
+            corr = (dst.tolist(), starts)
+        return hist, corr

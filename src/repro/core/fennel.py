@@ -3,14 +3,18 @@
 This is the paper's primary baseline *and* the scoring core CUTTANA builds on
 (paper Eq. 7). ``hybrid=True`` + ``balance_mode="edge"`` reproduces the
 edge-balanced variant the paper added to FENNEL for its RQ2 study.
+
+Phase-1 runs through :class:`repro.core.engine.StreamEngine` (chunked
+kernel-backed scoring, bit-identical to the seed per-vertex loop kept in
+:mod:`repro.core.legacy`).
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.base import FennelParams, PartitionState, finalize, make_fennel_score
+from repro.core.base import FennelParams, PartitionState, finalize
+from repro.core.engine import EngineConfig, FennelScorer, ImmediatePolicy, StreamEngine
 from repro.graph.csr import CSRGraph
-from repro.graph.stream import stream_order
 
 
 def partition(
@@ -21,16 +25,20 @@ def partition(
     params: FennelParams | None = None,
     order: str = "natural",
     seed: int = 0,
+    chunk: int = 512,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
 ) -> np.ndarray:
     params = params or FennelParams()
     state = PartitionState.create(graph, k, epsilon, balance_mode, seed)
-    score_fn = make_fennel_score(graph, k, params, balance_mode)
-    indptr, indices = graph.indptr, graph.indices
-    for v in stream_order(graph, order, seed):
-        nbrs = indices[indptr[v] : indptr[v + 1]]
-        hist = state.neighbor_histogram(nbrs)
-        scores = score_fn(state, hist)
-        allowed = ~state.would_overflow(nbrs.size)
-        p = state.argmax_tiebreak(scores, allowed)
-        state.assign(int(v), p, nbrs.size)
+    engine = StreamEngine(
+        graph,
+        state,
+        FennelScorer(graph, k, params, balance_mode),
+        ImmediatePolicy(),
+        order=order,
+        seed=seed,
+        config=EngineConfig(chunk=chunk, use_pallas=use_pallas, interpret=interpret),
+    )
+    engine.run()
     return finalize(state)

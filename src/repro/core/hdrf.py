@@ -60,6 +60,9 @@ def _partition_edges(
     # per-vertex per-partition edge counts for master election
     vp_edges = np.zeros((graph.num_vertices, k), dtype=np.int32)
     eps = 1e-3
+    # ginger's FENNEL-shaped balance term is stream-invariant - hoist it
+    alpha = np.sqrt(k) * m / (max(graph.num_vertices, 1) ** 1.5)
+    bal_div = max(m / k, 1)
     for idx in order:
         u, v = int(edges[idx, 0]), int(edges[idx, 1])
         pdeg[u] += 1
@@ -79,10 +82,14 @@ def _partition_edges(
             low_u = du <= dv
             gu = np.where(replicas[u], 2.0 if low_u else 1.0, 0.0)
             gv = np.where(replicas[v], 2.0 if not low_u else 1.0, 0.0)
-            alpha = np.sqrt(k) * m / (max(graph.num_vertices, 1) ** 1.5)
-            scores = gu + gv - alpha * np.sqrt(np.maximum(sizes, 0.0)) / max(m / k, 1)
+            scores = gu + gv - alpha * np.sqrt(np.maximum(sizes, 0.0)) / bal_div
         scores = np.where(sizes + 1 > cap, -np.inf, scores)
         p = int(scores.argmax())
+        if not np.isfinite(scores[p]):
+            # every partition at the hard cap (possible when cap < 1 for tiny
+            # graphs): argmax would silently pick partition 0 and break the
+            # balance it exists to enforce - fall back to least loaded
+            p = int(sizes.argmin())
         edge_part[idx] = p
         replicas[u, p] = True
         replicas[v, p] = True

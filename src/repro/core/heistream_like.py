@@ -7,14 +7,19 @@ batch-induced subgraph + greedy initial placement + FM-style local refinement
 inside the batch against partition anchor nodes. Like the original, quality is
 strongly order-sensitive (great when batches are neighbourhood-coherent, e.g.
 road networks - exactly the paper's US-Roads observation).
+
+The greedy placement phase is a :class:`repro.core.engine.StreamEngine` chunk
+(one kernel call per batch); FM refinement runs as the engine's
+``on_chunk_end`` hook. Bit-identical to the seed loop in
+:mod:`repro.core.legacy`.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.base import FennelParams, PartitionState, finalize, make_fennel_score
+from repro.core.base import FennelParams, PartitionState, finalize
+from repro.core.engine import EngineConfig, FennelScorer, ImmediatePolicy, StreamEngine
 from repro.graph.csr import CSRGraph
-from repro.graph.stream import stream_order
 
 
 def partition(
@@ -26,32 +31,20 @@ def partition(
     fm_passes: int = 3,
     order: str = "natural",
     seed: int = 0,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
 ) -> np.ndarray:
     state = PartitionState.create(graph, k, epsilon, balance_mode, seed)
-    score_fn = make_fennel_score(
-        graph, k, FennelParams(hybrid=(balance_mode == "edge")), balance_mode
-    )
     indptr, indices = graph.indptr, graph.indices
     rng = np.random.default_rng(seed)
-    ids = stream_order(graph, order, seed)
 
-    for start in range(0, len(ids), batch_size):
-        batch = [int(v) for v in ids[start : start + batch_size]]
-        nbrs_of = {v: indices[indptr[v] : indptr[v + 1]] for v in batch}
-        # ---- initial greedy placement (assigns into global state)
-        for v in batch:
-            nbrs = nbrs_of[v]
-            hist = state.neighbor_histogram(nbrs)  # includes batch-local
-            scores = score_fn(state, hist)
-            allowed = ~state.would_overflow(nbrs.size)
-            p = state.argmax_tiebreak(scores, allowed)
-            state.assign(v, p, nbrs.size)
+    def fm_refine(eng: StreamEngine, batch: np.ndarray, nbr_views: list) -> None:
         # ---- FM-style refinement inside the batch
         for _ in range(fm_passes):
             moved = 0
             for v in rng.permutation(batch):
                 v = int(v)
-                nbrs = nbrs_of[v]
+                nbrs = indices[indptr[v] : indptr[v + 1]]
                 deg = nbrs.size
                 cur = int(state.part_of[v])
                 hist = state.neighbor_histogram(nbrs)
@@ -72,4 +65,22 @@ def partition(
                     moved += 1
             if moved == 0:
                 break
+        # FM moved mass behind the scorer's back - refresh its penalty cache
+        eng.scorer.begin(state)
+
+    engine = StreamEngine(
+        graph,
+        state,
+        FennelScorer(
+            graph, k, FennelParams(hybrid=(balance_mode == "edge")), balance_mode
+        ),
+        ImmediatePolicy(),
+        order=order,
+        seed=seed,
+        config=EngineConfig(
+            chunk=batch_size, use_pallas=use_pallas, interpret=interpret
+        ),
+        on_chunk_end=fm_refine,
+    )
+    engine.run()
     return finalize(state)

@@ -1,14 +1,18 @@
 """Linear Deterministic Greedy (Stanton & Kliot, KDD'12).
 
 score_i = |V_i ∩ N(v)| * (1 - size_i / C)   with capacity C per balance mode.
+
+Phase-1 runs through :class:`repro.core.engine.StreamEngine` (chunked
+kernel-backed scoring, bit-identical to the seed per-vertex loop kept in
+:mod:`repro.core.legacy`).
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core.base import PartitionState, finalize
+from repro.core.engine import EngineConfig, ImmediatePolicy, LDGScorer, StreamEngine
 from repro.graph.csr import CSRGraph
-from repro.graph.stream import stream_order
 
 
 def partition(
@@ -18,22 +22,19 @@ def partition(
     balance_mode: str = "vertex",
     order: str = "natural",
     seed: int = 0,
+    chunk: int = 512,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
 ) -> np.ndarray:
     state = PartitionState.create(graph, k, epsilon, balance_mode, seed)
-    indptr, indices = graph.indptr, graph.indices
-    for v in stream_order(graph, order, seed):
-        nbrs = indices[indptr[v] : indptr[v + 1]]
-        hist = state.neighbor_histogram(nbrs)
-        if balance_mode == "vertex":
-            frac = state.v_counts / state.vertex_capacity
-        else:
-            frac = state.e_counts / state.edge_capacity
-        scores = hist * np.maximum(1.0 - frac, 0.0)
-        # LDG ties (incl. the all-zero-hist case) go to the least-loaded bin:
-        # express that as a tiny negative load term.
-        loads = state.v_counts if balance_mode == "vertex" else state.e_counts
-        scores = scores - 1e-9 * loads
-        allowed = ~state.would_overflow(nbrs.size)
-        p = state.argmax_tiebreak(scores, allowed)
-        state.assign(int(v), p, nbrs.size)
+    engine = StreamEngine(
+        graph,
+        state,
+        LDGScorer(graph, k, balance_mode),
+        ImmediatePolicy(),
+        order=order,
+        seed=seed,
+        config=EngineConfig(chunk=chunk, use_pallas=use_pallas, interpret=interpret),
+    )
+    engine.run()
     return finalize(state)

@@ -6,16 +6,21 @@ Pass 1 runs any registered partitioner; passes 2..n re-stream vertices with
 the FULL previous assignment visible (no premature-assignment problem at
 all), reassigning each vertex greedily under the balance condition; an
 optional final refinement pass applies phase-2 trades.
+
+Each re-pass is a :class:`repro.core.engine.StreamEngine` run with
+``ImmediatePolicy(reassign=True)`` - chunked kernel scoring with exact
+move corrections, bit-identical to the seed loop in
+:mod:`repro.core.legacy`.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core import get_partitioner
-from repro.core.base import FennelParams, PartitionState, make_fennel_score
+from repro.core.base import FennelParams, PartitionState
 from repro.core.cuttana import refine_any
+from repro.core.engine import EngineConfig, FennelScorer, ImmediatePolicy, StreamEngine
 from repro.graph.csr import CSRGraph
-from repro.graph.stream import stream_order
 
 
 def partition_restream(
@@ -28,12 +33,14 @@ def partition_restream(
     final_refine: bool = True,
     order: str = "random",
     seed: int = 0,
+    chunk: int = 512,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
 ) -> np.ndarray:
     part = get_partitioner(base)(
         graph, k, epsilon=epsilon, balance_mode=balance_mode,
         order=order, seed=seed,
     )
-    indptr, indices = graph.indptr, graph.indices
     deg = graph.degrees
     params = FennelParams(hybrid=(balance_mode == "edge"))
     for p in range(1, passes):
@@ -43,23 +50,18 @@ def partition_restream(
         state.e_counts[:] = np.bincount(
             part, weights=deg.astype(np.float64), minlength=k
         )
-        score_fn = make_fennel_score(graph, k, params, balance_mode)
-        for v in stream_order(graph, order, seed + p):
-            v = int(v)
-            d = int(deg[v])
-            cur = int(state.part_of[v])
-            # remove v, score against the full assignment, reinsert
-            state.v_counts[cur] -= 1
-            state.e_counts[cur] -= d
-            nbrs = indices[indptr[v] : indptr[v + 1]]
-            hist = state.neighbor_histogram(nbrs)
-            scores = score_fn(state, hist)
-            allowed = ~state.would_overflow(d)
-            allowed[cur] = True  # staying put never violates balance
-            new = state.argmax_tiebreak(scores, allowed)
-            state.part_of[v] = new
-            state.v_counts[new] += 1
-            state.e_counts[new] += d
+        engine = StreamEngine(
+            graph,
+            state,
+            FennelScorer(graph, k, params, balance_mode),
+            ImmediatePolicy(reassign=True),
+            order=order,
+            seed=seed + p,
+            config=EngineConfig(
+                chunk=chunk, use_pallas=use_pallas, interpret=interpret
+            ),
+        )
+        engine.run()
         part = state.part_of.copy()
     if final_refine and k > 1:
         part = refine_any(

@@ -7,6 +7,7 @@ property is robustness to input order.
 """
 from __future__ import annotations
 
+from collections import deque
 from typing import Iterator
 
 import numpy as np
@@ -36,10 +37,11 @@ def _traversal_order(graph: CSRGraph, dfs: bool, seed: int) -> np.ndarray:
     for root in roots:
         if visited[root]:
             continue
-        stack = [int(root)]
+        stack = deque([int(root)])
         visited[root] = True
         while stack:
-            v = stack.pop() if dfs else stack.pop(0)
+            # deque.popleft is O(1); list.pop(0) made BFS O(n^2)
+            v = stack.pop() if dfs else stack.popleft()
             out[pos] = v
             pos += 1
             for u in graph.neighbors(v):

@@ -13,6 +13,35 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def kernel_active(use_pallas: bool | None, interpret: bool = False) -> bool:
+    """Resolve the tri-state ``use_pallas`` flag the same way
+    :func:`fennel_scores` does (None => kernel only on TPU)."""
+    if interpret:
+        return True
+    return _on_tpu() if use_pallas is None else bool(use_pallas)
+
+
+def neighbor_histograms_host(
+    rows: np.ndarray,  # int[NNZ] batch-row index of each neighbour slot
+    parts: np.ndarray,  # int[NNZ] neighbour partition ids, -1 = unassigned
+    num_rows: int,
+    k: int,
+) -> np.ndarray:
+    """hist[B, K] of assigned-neighbour counts from flat (row, part) pairs.
+
+    The CPU companion of the Pallas histogram: one ``bincount`` over the
+    chunk's edges instead of a per-vertex loop (and instead of the jnp
+    reference's [B, D, K] one-hot cube, which is far too slow for the
+    streaming hot path)."""
+    mask = parts >= 0
+    idx = rows[mask] * np.int64(k) + parts[mask]
+    return (
+        np.bincount(idx, minlength=num_rows * k)
+        .reshape(num_rows, k)
+        .astype(np.float64)
+    )
+
+
 def fennel_scores(
     nbr_parts,
     sizes,
@@ -27,9 +56,7 @@ def fennel_scores(
     """
     nbr_parts = jnp.asarray(nbr_parts, jnp.int32)
     sizes = jnp.asarray(sizes, jnp.float32)
-    if use_pallas is None:
-        use_pallas = _on_tpu()
-    if not use_pallas and not interpret:
+    if not kernel_active(use_pallas, interpret):
         return fennel_scores_ref(nbr_parts, sizes, alpha, gamma)
     b, d = nbr_parts.shape
     block_b = 128 if b >= 128 else 8

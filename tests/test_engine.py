@@ -1,0 +1,307 @@
+"""StreamEngine parity vs the seed per-vertex loops (repro.core.legacy) and
+unit tests for the array-backed PriorityBuffer.
+
+The engine's exact mode must be *bit-identical* to the sequential loops:
+same scores, same tie-break RNG draws, same buffer eviction order. These
+tests pin that contract for every stream order and balance mode.
+"""
+import numpy as np
+import pytest
+
+from repro.core import PARTITIONERS, legacy
+from repro.core.buffer import PriorityBuffer
+from repro.core.cuttana import partition as cuttana_partition
+from repro.core.cuttana_batched import partition_batched
+from repro.core.fennel import partition as fennel_partition
+from repro.core.heistream_like import partition as heistream_partition
+from repro.core.ldg import partition as ldg_partition
+from repro.core.restream import partition_restream
+from repro.graph import powerlaw_cluster_graph, rmat_graph
+
+ORDERS = ("natural", "random", "bfs", "dfs")
+
+
+@pytest.fixture(scope="module")
+def graphs():
+    return [
+        rmat_graph(1200, avg_degree=10, seed=3),
+        powerlaw_cluster_graph(900, avg_degree=8, seed=4),
+    ]
+
+
+# ------------------------------------------------------------------- parity
+@pytest.mark.parametrize("order", ORDERS)
+@pytest.mark.parametrize("balance_mode", ["vertex", "edge"])
+def test_engine_fennel_parity(graphs, order, balance_mode):
+    for g in graphs:
+        want = legacy.fennel_partition(
+            g, 4, balance_mode=balance_mode, order=order, seed=7
+        )
+        got = fennel_partition(g, 4, balance_mode=balance_mode, order=order, seed=7)
+        np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("order", ORDERS)
+@pytest.mark.parametrize("balance_mode", ["vertex", "edge"])
+def test_engine_ldg_parity(graphs, order, balance_mode):
+    for g in graphs:
+        want = legacy.ldg_partition(
+            g, 4, balance_mode=balance_mode, order=order, seed=7
+        )
+        got = ldg_partition(g, 4, balance_mode=balance_mode, order=order, seed=7)
+        np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("order", ORDERS)
+def test_engine_cuttana_buffered_parity(graphs, order):
+    # small d_max / max_qsize exercise the D_max bypass, overflow evictions
+    # and complete-eviction cascades
+    kw = dict(d_max=32, max_qsize=128, theta=0.7, seed=1)
+    for g in graphs:
+        want = legacy.cuttana_partition(g, 4, order=order, **kw)
+        got = cuttana_partition(g, 4, order=order, **kw)
+        np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("use_refinement", [False, True])
+def test_engine_cuttana_unbuffered_parity(graphs, use_refinement):
+    for g in graphs:
+        want = legacy.cuttana_partition(
+            g, 4, use_buffer=False, use_refinement=use_refinement,
+            order="random", seed=1,
+        )
+        got = cuttana_partition(
+            g, 4, use_buffer=False, use_refinement=use_refinement,
+            order="random", seed=1,
+        )
+        np.testing.assert_array_equal(got, want)
+
+
+def test_engine_cuttana_batched_parity(graphs):
+    # chunk smaller than the graph + tiny sample_cap to exercise the stale
+    # histograms and the degree-capped sampling path
+    kw = dict(chunk=128, sample_cap=16, order="random", seed=1)
+    for g in graphs:
+        want = legacy.cuttana_batched_partition(g, 4, **kw)
+        got = partition_batched(g, 4, **kw)
+        np.testing.assert_array_equal(got, want)
+
+
+def test_engine_heistream_parity(graphs):
+    for g in graphs:
+        want = legacy.heistream_partition(g, 4, batch_size=256, seed=1)
+        got = heistream_partition(g, 4, batch_size=256, seed=1)
+        np.testing.assert_array_equal(got, want)
+
+
+def test_engine_restream_parity(graphs):
+    for g in graphs:
+        want = legacy.restream_partition(
+            g, 4, passes=3, base="fennel", order="random", seed=0
+        )
+        got = partition_restream(
+            g, 4, passes=3, base="fennel", order="random", seed=0
+        )
+        np.testing.assert_array_equal(got, want)
+
+
+def test_engine_kernel_interpret_matches_host_path(graphs):
+    """The Pallas kernel (interpret mode) and the CPU bincount companion
+    must produce the same histograms, hence the same partitions."""
+    g = graphs[0]
+    host = fennel_partition(g, 4, order="random", seed=2, use_pallas=False)
+    kern = fennel_partition(g, 4, order="random", seed=2, interpret=True)
+    np.testing.assert_array_equal(host, kern)
+
+
+def test_engine_kernel_hub_cap_parity(graphs, monkeypatch):
+    """Exact mode bounds the dense kernel width; over-width hub rows get
+    exact host histograms. Force the cap low so the branch runs."""
+    import repro.core.engine as engine_mod
+
+    g = graphs[0]
+    assert int(g.degrees.max()) > 8
+    monkeypatch.setattr(engine_mod, "_EXACT_KERNEL_WIDTH", 8)
+    got = fennel_partition(g, 4, order="random", seed=3, interpret=True)
+    want = legacy.fennel_partition(g, 4, order="random", seed=3)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_engine_kernel_sampled_scatter_parity(graphs):
+    """Stale mode + sampling through the kernel path (interpret) must match
+    the seed batched loop run through the same kernel."""
+    g = graphs[0]
+    kw = dict(chunk=128, sample_cap=16, order="random", seed=1, interpret=True)
+    got = partition_batched(g, 4, **kw)
+    want = legacy.cuttana_batched_partition(g, 4, **kw)
+    np.testing.assert_array_equal(got, want)
+
+
+class _ProtocolOnlyScorer:
+    """FennelScorer stripped of the affine fast path: exercises
+    ImmediatePolicy._run_generic, the path custom Scorer implementations
+    take."""
+
+    def __init__(self, inner):
+        self._inner = inner
+
+    def begin(self, state):
+        self._inner.begin(state)
+
+    def scores(self, state, hist):
+        return self._inner.scores(state, hist)
+
+    def on_assign(self, state, p, deg):
+        self._inner.on_assign(state, p, deg)
+
+    def on_unassign(self, state, p, deg):
+        self._inner.on_unassign(state, p, deg)
+
+
+def test_engine_generic_scorer_path_parity(graphs):
+    from repro.core.base import FennelParams, PartitionState, finalize
+    from repro.core.engine import FennelScorer, ImmediatePolicy, StreamEngine
+
+    g = graphs[0]
+    scorer = _ProtocolOnlyScorer(FennelScorer(g, 4, FennelParams(), "vertex"))
+    assert not hasattr(scorer, "affine")
+    state = PartitionState.create(g, 4, 0.05, "vertex", seed=7)
+    StreamEngine(g, state, scorer, ImmediatePolicy(), order="random", seed=7).run()
+    want = legacy.fennel_partition(g, 4, order="random", seed=7)
+    np.testing.assert_array_equal(finalize(state), want)
+
+
+def test_engine_generic_scorer_reassign_parity(graphs):
+    """_run_generic's reassign branch vs the affine one: identical moves."""
+    from repro.core.base import FennelParams, PartitionState
+    from repro.core.engine import FennelScorer, ImmediatePolicy, StreamEngine
+
+    g = graphs[0]
+    base = legacy.fennel_partition(g, 4, balance_mode="edge", order="random", seed=0)
+    parts = []
+    for wrap in (False, True):
+        scorer = FennelScorer(g, 4, FennelParams(hybrid=True), "edge")
+        if wrap:
+            scorer = _ProtocolOnlyScorer(scorer)
+        state = PartitionState.create(g, 4, 0.05, "edge", seed=1)
+        state.part_of[:] = base
+        state.v_counts[:] = np.bincount(base, minlength=4)
+        state.e_counts[:] = np.bincount(
+            base, weights=g.degrees.astype(np.float64), minlength=4
+        )
+        StreamEngine(
+            g, state, scorer, ImmediatePolicy(reassign=True),
+            order="random", seed=1,
+        ).run()
+        parts.append(state.part_of.copy())
+    np.testing.assert_array_equal(parts[0], parts[1])
+
+
+def test_legacy_variants_registered():
+    for name in ("fennel", "ldg", "cuttana", "cuttana-batched", "heistream"):
+        assert name in PARTITIONERS
+        assert f"{name}-legacy" in PARTITIONERS
+
+
+# ------------------------------------------------------------ array buffer
+def test_buffer_evicts_in_score_order():
+    buf = PriorityBuffer(capacity=100, d_max=100, theta=1.0)
+    degs = [10, 50, 30, 50, 5]
+    for v, d in enumerate(degs):
+        buf.push(v, np.arange(d), 0)
+    # score == deg/d_max; ties (the two deg-50 entries) break to smaller id
+    order = [buf.pop_best()[0] for _ in range(len(degs))]
+    assert order == [1, 3, 2, 0, 4]
+    assert len(buf) == 0
+
+
+def test_buffer_notify_reorders_and_invalidates_stale_entries():
+    buf = PriorityBuffer(capacity=100, d_max=100, theta=1.0)
+    buf.push(0, np.arange(10), 0)  # score 0.1
+    buf.push(1, np.arange(20), 0)  # score 0.2
+    # bump vertex 0 twice: score 0.1 + 2/10 = 0.3 > 0.2
+    assert buf.notify_assigned(0) is False
+    assert buf.notify_assigned(0) is False
+    v, nbrs = buf.pop_best()
+    assert v == 0 and nbrs.shape[0] == 10
+    # the two stale heap entries for vertex 0 must not resurface
+    v, _ = buf.pop_best()
+    assert v == 1
+    with pytest.raises(IndexError):
+        buf.pop_best()
+
+
+def test_buffer_complete_eviction_and_notify_many():
+    g = rmat_graph(300, avg_degree=6, seed=0)
+    buf = PriorityBuffer(capacity=100, d_max=1000, theta=1.0, graph=g)
+    v = int(np.argmax(g.degrees))
+    nbrs = g.neighbors(v)
+    deg = nbrs.shape[0]
+    buf.push(v, None, deg - 1)  # one unassigned neighbour left
+    assert buf.notify_assigned(v) is True  # now complete
+    returned = buf.remove(v)
+    np.testing.assert_array_equal(returned, nbrs)
+    # vectorised path: batch-notify a placed vertex's neighbourhood
+    others = [int(u) for u in nbrs[:3]]
+    for u in others:
+        buf.push(u, None, int(g.degree(u)) - 1)
+    complete = buf.notify_many(nbrs)
+    assert complete == others  # all complete, reported in nbrs order
+    for u in others:
+        buf.remove(u)
+    assert len(buf) == 0
+
+
+def test_buffer_notify_many_matches_scalar_notify():
+    g = rmat_graph(400, avg_degree=8, seed=1)
+    a = PriorityBuffer(capacity=1000, d_max=50, theta=1.0, graph=g)
+    b = PriorityBuffer(capacity=1000, d_max=50, theta=1.0, graph=g)
+    rng = np.random.default_rng(0)
+    verts = rng.choice(g.num_vertices, size=200, replace=False)
+    for v in verts:
+        a.push(int(v), None, 0)
+        b.push(int(v), None, 0)
+    placed = rng.choice(g.num_vertices, size=50, replace=False)
+    for u in placed:
+        nbrs = g.neighbors(int(u))
+        got = b.notify_many(nbrs)
+        want = []
+        for w in nbrs:
+            wi = int(w)
+            if a.contains(wi) and a.notify_assigned(wi):
+                want.append(wi)
+                a.remove(wi)
+        assert got == want
+        for wi in got:
+            b.remove(wi)
+    pa, pb = [], []
+    while len(a):
+        pa.append(a.pop_best()[0])
+    while len(b):
+        pb.append(b.pop_best()[0])
+    assert pa == pb
+
+
+def test_buffer_notify_many_duplicate_neighbours():
+    """dedupe=False graphs can repeat a neighbour in one row: increments are
+    counted per occurrence, completes reported once."""
+    buf = PriorityBuffer(capacity=10, d_max=100, theta=1.0)
+    buf.push(5, np.arange(2), 1)
+    buf.push(7, np.arange(4), 0)
+    assert buf.notify_many(np.array([5, 5])) == [5]
+    buf.remove(5)  # a single remove must suffice
+    assert buf.notify_many(np.array([7, 7])) == []
+    assert buf.score(7) == 4 / 100 + 1.0 * 2 / 4  # both occurrences counted
+
+
+def test_buffer_reuse_after_remove():
+    """Re-pushing a removed vertex must not be confused by stale entries."""
+    buf = PriorityBuffer(capacity=10, d_max=10, theta=1.0)
+    buf.push(0, np.arange(5), 0)
+    buf.notify_assigned(0)  # stale entry for version 0 remains in the heap
+    buf.remove(0)
+    buf.push(0, np.arange(5), 4)  # re-push with a much higher score
+    buf.push(1, np.arange(2), 0)
+    v, _ = buf.pop_best()
+    assert v == 0
+    assert buf.score(0) == 5 / 10 + 4 / 5

@@ -1,6 +1,9 @@
 """Property-based tests (hypothesis) for the system's core invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.buffer import PriorityBuffer
 from repro.core.cuttana import partition as cuttana_partition
