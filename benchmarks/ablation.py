@@ -1,9 +1,9 @@
-"""Paper Table III: contribution of buffering and refinement (K=16)."""
+"""Paper Table III: contribution of buffering and refinement (K=16).
+Each variant is a ``PartitionSpec`` params block over the same algorithm."""
 from __future__ import annotations
 
-from benchmarks.common import emit, timed
-from repro.core.cuttana import partition as cuttana
-from repro.graph import edge_cut
+from benchmarks.common import emit
+from repro.api import PartitionSpec, partition
 from repro.graph.generators import load_dataset
 
 VARIANTS = {
@@ -19,16 +19,21 @@ def run(k: int = 16, datasets=("social-s", "web-s"), seed: int = 0):
     for ds in datasets:
         graph = load_dataset(ds, seed=seed)
         base = None
-        for name, kwargs in VARIANTS.items():
-            part, us = timed(
-                cuttana, graph, k, balance_mode="edge", order="random",
-                seed=seed, **kwargs,
+        for name, params in VARIANTS.items():
+            spec = PartitionSpec(
+                algo="cuttana", k=k, balance_mode="edge", order="random",
+                seed=seed, params=params,
             )
-            ec = edge_cut(graph, part)
+            result = partition(graph, spec)
+            ec = result.quality()["edge_cut"]
             if name == "fennel(no_both)":
                 base = ec
-            rows.append(dict(dataset=ds, variant=name, edge_cut=ec))
-            emit(f"ablation/{ds}/{name}", us, f"edge_cut={ec:.4f}")
+            rows.append(dict(dataset=ds, variant=name, edge_cut=ec,
+                             refine_moves=result.telemetry.get("refine_moves", 0),
+                             buffer_evictions=result.telemetry.get(
+                                 "buffer_evictions", 0)))
+            emit(f"ablation/{ds}/{name}",
+                 result.timings["total_s"] * 1e6, f"edge_cut={ec:.4f}")
         for r in rows:
             if r["dataset"] == ds and base:
                 r["improvement_vs_fennel"] = 1 - r["edge_cut"] / base

@@ -1,24 +1,18 @@
 """Paper Table IV: distributed analytics latency (PageRank 30 iters, CC,
-SSSP) under each partitioner.
+SSSP) under each partitioner, driven through ``repro.api``.
 
-Two measurements:
-  * the cluster cost model (v5e-pod constants) for every partitioner
-    including the vertex-cut edge partitioners (HDRF/Ginger), and
-  * a real run of the JAX engine (simulated-device mode) for the vertex
-    partitioners, reporting measured halo traffic.
+Two measurements per partition result:
+  * ``result.analytics(mode="model")`` - the cluster cost model (v5e-pod
+    constants) for every partitioner including the vertex-cut edge
+    partitioners (HDRF/Ginger), and
+  * ``result.analytics(mode="simulated")`` - a real run of the JAX engine
+    (simulated-device mode) for the vertex partitioners, reporting measured
+    halo traffic.
 """
 from __future__ import annotations
 
-from benchmarks.common import emit, timed
-from repro.analytics import (
-    GraphEngine,
-    localize,
-    pagerank_program,
-    cc_program,
-    sssp_program,
-    workload_cost,
-)
-from repro.core import get_edge_partitioner, get_partitioner
+from benchmarks.common import emit
+from repro.api import PartitionSpec, partition
 from repro.graph.generators import load_dataset
 
 WORKLOADS = {"pagerank": 30, "cc": 20, "sssp": 20}
@@ -31,16 +25,19 @@ def run(k: int = 8, datasets=("social-s", "web-s"), seed: int = 0,
     rows = []
     for ds in datasets:
         graph = load_dataset(ds, seed=seed)
-        assignments = {}
+        results = {}
         for name in VERTEX_PARTITIONERS:
-            assignments[name] = get_partitioner(name)(
-                graph, k, balance_mode="edge", order="random", seed=seed
+            spec = PartitionSpec(
+                algo=name, k=k, balance_mode="edge", order="random", seed=seed
             )
+            results[name] = partition(graph, spec)
         for name in EDGE_PARTITIONERS:
-            assignments[name] = get_edge_partitioner(name)(graph, k, seed=seed)
+            results[name] = partition(
+                graph, PartitionSpec(algo=name, k=k, seed=seed)
+            )
         for wl, iters in WORKLOADS.items():
-            for name, assignment in assignments.items():
-                cost = workload_cost(graph, assignment, k, iters)
+            for name, result in results.items():
+                cost = result.analytics(program=wl, iters=iters, mode="model")
                 rows.append(dict(dataset=ds, workload=wl, algo=name, **cost))
                 emit(
                     f"analytics_model/{ds}/{wl}/{name}",
@@ -49,26 +46,20 @@ def run(k: int = 8, datasets=("social-s", "web-s"), seed: int = 0,
                     f"netB/iter={cost['network_bytes_per_iter']:.2e}",
                 )
         if engine_run:
-            programs = {
-                "pagerank": pagerank_program(),
-                "cc": cc_program(),
-                "sssp": sssp_program(),
-            }
             for name in ("cuttana", "fennel"):
-                lg = localize(graph, assignments[name], k)
-                eng = GraphEngine(lg, programs["pagerank"])
-                _, us = timed(eng.run_simulated, 10)
-                st = eng.stats(10)
+                sim = results[name].analytics(
+                    program="pagerank", iters=10, mode="simulated"
+                )
                 emit(
                     f"analytics_engine/{ds}/pagerank10/{name}",
-                    us,
-                    f"halo_msgs/iter={st.true_halo_messages_per_iter};"
-                    f"max_edges={st.max_local_edges}",
+                    sim["seconds"] * 1e6,
+                    f"halo_msgs/iter={sim['halo_messages_per_iter']};"
+                    f"max_edges={sim['max_local_edges']}",
                 )
                 rows.append(dict(dataset=ds, workload="pagerank10-engine",
                                  algo=name,
-                                 halo=st.true_halo_messages_per_iter,
-                                 max_edges=st.max_local_edges))
+                                 halo=sim["halo_messages_per_iter"],
+                                 max_edges=sim["max_local_edges"]))
     return rows
 
 

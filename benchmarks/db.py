@@ -1,40 +1,47 @@
 """Paper Table V: graph-DB one/two-hop throughput per partitioner on the
-LDBC-like benchmark."""
+LDBC-like benchmark, driven through ``repro.api``
+(spec -> result -> ``result.db(...)``)."""
 from __future__ import annotations
 
 from benchmarks.common import emit
-from repro.core import get_partitioner
-from repro.db import QueryEngine, ldbc_query_mix
-from repro.graph import edge_cut, edge_imbalance, vertex_imbalance
+from repro.api import PartitionSpec, partition
 from repro.graph.generators import load_dataset
 
 
 def run(k: int = 4, dataset: str = "ldbc-s", num_queries: int = 400,
         seed: int = 0):
+    from repro.db import ldbc_query_mix
+
     graph = load_dataset(dataset, seed=seed)
     seeds = ldbc_query_mix(graph, num_queries, seed=seed + 1)
     rows = []
     for name in ("cuttana", "fennel", "heistream", "ldg", "random"):
-        part = get_partitioner(name)(
-            graph, k, balance_mode="edge" if name == "cuttana" else "vertex",
-            order="random", seed=seed,
-        )
-        eng = QueryEngine(graph, part, k)
-        _, s1 = eng.one_hop(seeds)
-        _, s2 = eng.two_hop(seeds)
+        if name == "random":
+            spec = PartitionSpec(algo=name, k=k, seed=seed)
+        else:
+            spec = PartitionSpec(
+                algo=name, k=k,
+                balance_mode="edge" if name == "cuttana" else "vertex",
+                order="random", seed=seed,
+            )
+        result = partition(graph, spec)
+        rep = result.quality()
+        one = result.db(hops=1, seeds=seeds)
+        two = result.db(hops=2, seeds=seeds)
         row = dict(
             algo=name,
-            edge_cut=edge_cut(graph, part),
-            edge_imbalance=edge_imbalance(graph, part, k),
-            vertex_imbalance=vertex_imbalance(part, k),
-            one_hop_qps=s1.throughput_qps(),
-            two_hop_qps=s2.throughput_qps(),
-            two_hop_p99_ms=s2.p99_latency_s() * 1e3,
+            spec=spec.to_dict(),
+            edge_cut=rep["edge_cut"],
+            edge_imbalance=rep["edge_imbalance"],
+            vertex_imbalance=rep["vertex_imbalance"],
+            one_hop_qps=one["qps"],
+            two_hop_qps=two["qps"],
+            two_hop_p99_ms=two["p99_latency_ms"],
         )
         rows.append(row)
         emit(
             f"db/{dataset}/{name}",
-            s2.latencies_s.mean() * 1e6,
+            two["mean_latency_ms"] * 1e3,
             f"1hop_qps={row['one_hop_qps']:.0f};2hop_qps={row['two_hop_qps']:.0f};"
             f"ec={row['edge_cut']:.3f};eimb={row['edge_imbalance']:.2f}",
         )

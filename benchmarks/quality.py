@@ -1,10 +1,11 @@
 """Paper Table II: partitioning quality (λ_EC, λ_CV) across datasets,
-partitioners, and balance conditions (K=8)."""
+partitioners, and balance conditions (K=8). Runs entirely through
+``repro.api``: one ``PartitionSpec`` per cell, rows built from the
+``PartitionResult``."""
 from __future__ import annotations
 
-from benchmarks.common import emit, timed
-from repro.core import get_partitioner
-from repro.graph import quality_report
+from benchmarks.common import emit
+from repro.api import PartitionSpec, partition
 from repro.graph.generators import load_dataset
 
 PARTITIONERS = ["cuttana", "fennel", "heistream", "ldg"]
@@ -17,17 +18,18 @@ def run(k: int = 8, datasets=None, order: str = "random", seed: int = 0):
         graph = load_dataset(ds, seed=seed)
         for balance in ("edge", "vertex"):
             for name in PARTITIONERS:
-                fn = get_partitioner(name)
-                part, us = timed(
-                    fn, graph, k,
-                    epsilon=0.05, balance_mode=balance, order=order, seed=seed,
+                spec = PartitionSpec(
+                    algo=name, k=k, epsilon=0.05, balance_mode=balance,
+                    order=order, seed=seed,
                 )
-                rep = quality_report(graph, part, k)
+                result = partition(graph, spec)
+                rep = result.quality()
+                seconds = result.timings["total_s"]
                 rows.append(dict(dataset=ds, balance=balance, algo=name,
-                                 seconds=us / 1e6, **rep))
+                                 seconds=seconds, spec=spec.to_dict(), **rep))
                 emit(
                     f"quality/{ds}/{balance}/{name}",
-                    us,
+                    seconds * 1e6,
                     f"edge_cut={rep['edge_cut']:.4f};cv={rep['comm_volume']:.4f};"
                     f"edge_imb={rep['edge_imbalance']:.2f}",
                 )

@@ -1,11 +1,16 @@
 """Benchmark entry: one function per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV lines.
+Prints ``name,us_per_call,derived`` CSV lines; with ``--json`` also collects
+every suite's structured rows (built from ``PartitionResult``s in the
+api-driven suites) into one machine-readable report - the perf-trajectory
+artifact CI uploads.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only quality,db,...]
+                                           [--json out.json]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -15,7 +20,11 @@ def main() -> None:
     ap.add_argument("--full", action="store_true",
                     help="medium-size datasets (minutes instead of seconds)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="write all suites' structured rows to this file")
     args = ap.parse_args()
+
+    from repro.api.result import jsonify
 
     from benchmarks import (
         ablation,
@@ -53,16 +62,25 @@ def main() -> None:
         "roofline": roofline.run,
     }
     only = set(args.only.split(",")) if args.only else None
+    report: dict = {"full": args.full, "suites": {}}
     t0 = time.time()
     for name, fn in suites.items():
         if only and name not in only:
             continue
         print(f"# === {name} ===", flush=True)
         try:
-            fn()
+            rows = fn()
         except Exception as e:  # keep the suite running
             print(f"{name},0.0,ERROR={type(e).__name__}:{e}", flush=True)
-    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+            report["suites"][name] = {"error": f"{type(e).__name__}: {e}"}
+        else:
+            report["suites"][name] = {"rows": jsonify(rows)}
+    report["seconds"] = time.time() - t0
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"# wrote {args.json}", file=sys.stderr)
+    print(f"# total {report['seconds']:.1f}s", file=sys.stderr)
 
 
 if __name__ == "__main__":

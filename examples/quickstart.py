@@ -1,40 +1,47 @@
-"""Quickstart: partition a graph with CUTTANA, compare against FENNEL, and
-run distributed PageRank on the partition with the JAX engine.
+"""Quickstart: the full paper pipeline as three chained calls through
+``repro.api`` - partition a graph with CUTTANA, compare against FENNEL, then
+run distributed PageRank (real JAX engine, simulated K-device layout) and the
+graph-DB workload on the winning partition.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.analytics import GraphEngine, localize, pagerank_program, workload_cost
-from repro.core import get_partitioner
-from repro.graph import quality_report, rmat_graph
+from repro.api import PartitionSpec, partition
+from repro.graph import rmat_graph
 
 K = 8
 graph = rmat_graph(20_000, avg_degree=16, seed=0)
 print(f"graph: {graph}")
 
-parts = {}
+results = {}
 for name in ("fennel", "cuttana"):
-    part = get_partitioner(name)(
-        graph, K, balance_mode="edge", order="random", seed=0
+    # call 1: spec -> result (uniform across the whole algorithm zoo)
+    result = partition(
+        graph, PartitionSpec(algo=name, k=K, balance_mode="edge",
+                             order="random", seed=0)
     )
-    parts[name] = part
-    rep = quality_report(graph, part, K)
-    cost = workload_cost(graph, part, K, iters=30)
+    results[name] = result
+    rep = result.quality()  # lazily computed + cached
+    cost = result.analytics(program="pagerank", iters=30, mode="model")
     print(
         f"{name:8s} edge_cut={rep['edge_cut']:.4f} cv={rep['comm_volume']:.4f} "
         f"edge_imb={rep['edge_imbalance']:.2f} "
         f"PR30_model_latency={cost['total_s']*1e3:.2f}ms"
     )
 
-# run real PageRank on the CUTTANA partition (simulated K-device layout)
-lg = localize(graph, parts["cuttana"], K)
-eng = GraphEngine(lg, pagerank_program())
-ranks = eng.run_simulated(iters=20)
-stats = eng.stats(20)
-top = np.argsort(ranks)[-5:][::-1]
+# call 2: real PageRank on the CUTTANA partition (simulated K-device layout)
+sim = results["cuttana"].analytics(program="pagerank", iters=20, mode="simulated")
+top = np.argsort(sim["values"])[-5:][::-1]
 print(f"top-5 vertices by rank: {top.tolist()}")
 print(
-    f"halo messages/iter: {stats.true_halo_messages_per_iter} "
-    f"(= K*|V|*lambda_cv), max edges on one device: {stats.max_local_edges}"
+    f"halo messages/iter: {sim['halo_messages_per_iter']} "
+    f"(= K*|V|*lambda_cv), max edges on one device: {sim['max_local_edges']}"
+)
+
+# call 3: the graph-DB workload study on the same result
+db = results["cuttana"].db(hops=2, num_queries=200)
+print(
+    f"2-hop workload: {db['qps']:.0f} qps, p99 {db['p99_latency_ms']:.2f} ms, "
+    f"{db['total_rpcs']} cross-partition RPCs"
 )

@@ -1,0 +1,40 @@
+"""``repro.api`` - the canonical typed entry point from stream to analytics.
+
+The full paper pipeline is three chained calls:
+
+    >>> from repro.api import PartitionSpec, partition
+    >>> from repro.graph import rmat_graph
+    >>> g = rmat_graph(20_000, avg_degree=16, seed=0)
+    >>> result = partition(g, PartitionSpec(algo="cuttana", k=8))
+    >>> result.quality()          # lazily computed + cached λ_EC, λ_CV, ...
+    >>> result.analytics(program="pagerank", iters=30)   # paper Table IV
+    >>> result.db(hops=2)                                # paper Table V
+
+Specs are frozen and JSON-round-trippable (``PartitionSpec.from_json(
+spec.to_json()) == spec``) and validate against the declarative registry at
+construction. Run any spec headlessly with::
+
+    python -m repro.api.cli partition --spec spec.json --out report.json
+"""
+from repro.api.registry import (
+    REGISTRY,
+    PartitionerInfo,
+    get_info,
+    list_algorithms,
+    register,
+)
+from repro.api.result import PartitionResult
+from repro.api.runner import partition
+from repro.api.spec import STREAM_ORDERS, PartitionSpec
+
+__all__ = [
+    "PartitionSpec",
+    "PartitionResult",
+    "partition",
+    "PartitionerInfo",
+    "REGISTRY",
+    "register",
+    "get_info",
+    "list_algorithms",
+    "STREAM_ORDERS",
+]

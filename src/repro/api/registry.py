@@ -1,0 +1,306 @@
+"""Declarative partitioner registry: the single source of truth for the zoo.
+
+Each algorithm is described by a :class:`PartitionerInfo` entry instead of a
+bare ``name -> callable`` dict: what it cuts (``kind``), how it places
+vertices (``placement``), whether it routes through the batched
+:class:`~repro.core.engine.StreamEngine` or is a preserved seed loop
+(``engine``), which balance conditions it honours, and a *typed* params block
+(a frozen dataclass) holding its per-algorithm knobs. ``PartitionSpec``
+validates against these entries at construction, and
+:func:`repro.api.partition` uses them to drive any algorithm uniformly.
+
+This module is intentionally dependency-free (callables are referenced as
+``"module:attr"`` strings and resolved lazily) so it can be imported from
+``repro.core`` without cycles.
+"""
+from __future__ import annotations
+
+import dataclasses
+import difflib
+import importlib
+from typing import Any, Callable
+
+__all__ = [
+    "PartitionerInfo",
+    "REGISTRY",
+    "register",
+    "get_info",
+    "list_algorithms",
+    "unknown_algorithm_error",
+    "FennelAlgoParams",
+    "LDGAlgoParams",
+    "CuttanaAlgoParams",
+    "CuttanaBatchedAlgoParams",
+    "HeiStreamAlgoParams",
+    "RestreamAlgoParams",
+    "HDRFAlgoParams",
+]
+
+# common spec fields a partitioner accepts as keyword arguments
+_STREAM_COMMON = ("epsilon", "balance_mode", "order", "seed")
+
+
+# ------------------------------------------------------- typed params blocks
+@dataclasses.dataclass(frozen=True)
+class FennelAlgoParams:
+    """FENNEL knobs (paper Eq. 7). ``hybrid`` only bites in edge mode."""
+
+    gamma: float = 1.5
+    alpha_scale: float = 1.0
+    hybrid: bool = True
+    chunk: int = 512
+
+
+@dataclasses.dataclass(frozen=True)
+class LDGAlgoParams:
+    chunk: int = 512
+
+
+@dataclasses.dataclass(frozen=True)
+class CuttanaAlgoParams:
+    """CUTTANA Algorithm 1 + phase-2 knobs (paper §III)."""
+
+    d_max: int = 1000
+    max_qsize: int | None = None
+    theta: float = 1.0
+    subparts_per_partition: int | None = None
+    use_buffer: bool = True
+    use_refinement: bool = True
+    thresh: float = 0.0
+    max_moves: int | None = None
+    chunk: int = 512
+
+
+@dataclasses.dataclass(frozen=True)
+class CuttanaBatchedAlgoParams:
+    """Chunk-parallel variant: stale histograms + degree-capped sampling."""
+
+    chunk: int = 512
+    sample_cap: int = 512
+    use_refinement: bool = True
+    subparts_per_partition: int | None = None
+    thresh: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class HeiStreamAlgoParams:
+    batch_size: int = 4096
+    fm_passes: int = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class RestreamAlgoParams:
+    passes: int = 3
+    base: str = "cuttana"
+    final_refine: bool = True
+    chunk: int = 512
+
+
+@dataclasses.dataclass(frozen=True)
+class HDRFAlgoParams:
+    lam: float = 4.0
+
+
+# ------------------------------------------------------------------- entries
+@dataclasses.dataclass(frozen=True)
+class PartitionerInfo:
+    """One registry entry.
+
+    ``kind``:       "edge-cut" (vertex partitioner) | "vertex-cut" (edge
+                    partitioner returning an ``EdgePartition``).
+    ``placement``:  "immediate" | "buffered" | "restream" | "static".
+    ``engine``:     "engine" (StreamEngine-backed) | "legacy" (preserved seed
+                    loop) | "none" (no streaming scoring core).
+    ``balance_modes``: balance conditions the algorithm enforces; empty means
+                    the spec's ``balance_mode`` is not applicable.
+    ``common``:     which of (epsilon, balance_mode, order, seed) the
+                    callable accepts.
+    ``params_cls``: frozen dataclass of per-algorithm knobs, or None.
+    ``forward_exclude``: params-block fields *not* forwarded to the callable
+                    (legacy loops predate some engine knobs, e.g. ``chunk``).
+    ``fennel_params_fields``: params-block fields packed into a
+                    :class:`repro.core.base.FennelParams` passed as
+                    ``params=`` (FENNEL's historical calling convention).
+    """
+
+    name: str
+    entry: str  # "module:attr", resolved lazily
+    kind: str
+    placement: str
+    engine: str
+    balance_modes: tuple[str, ...] = ()
+    common: tuple[str, ...] = ()
+    params_cls: type | None = None
+    forward_exclude: tuple[str, ...] = ()
+    fennel_params_fields: tuple[str, ...] = ()
+    telemetry: bool = False
+    description: str = ""
+
+    def resolve(self) -> Callable:
+        mod, _, attr = self.entry.partition(":")
+        return getattr(importlib.import_module(mod), attr)
+
+    def param_names(self) -> tuple[str, ...]:
+        if self.params_cls is None:
+            return ()
+        return tuple(f.name for f in dataclasses.fields(self.params_cls))
+
+
+REGISTRY: dict[str, PartitionerInfo] = {}
+
+
+def register(info: PartitionerInfo) -> PartitionerInfo:
+    if info.name in REGISTRY:
+        raise ValueError(f"partitioner {info.name!r} already registered")
+    REGISTRY[info.name] = info
+    return info
+
+
+def list_algorithms(kind: str | None = None) -> list[str]:
+    return sorted(n for n, i in REGISTRY.items() if kind is None or i.kind == kind)
+
+
+def unknown_algorithm_error(name: str, kind: str | None = None) -> ValueError:
+    names = list_algorithms(kind)
+    msg = f"unknown partitioner {name!r}; registered: {', '.join(names)}"
+    close = difflib.get_close_matches(name, names, n=1)
+    if close:
+        msg += f". Did you mean {close[0]!r}?"
+    return ValueError(msg)
+
+
+def get_info(name: str, kind: str | None = None) -> PartitionerInfo:
+    info = REGISTRY.get(name)
+    if info is None:
+        raise unknown_algorithm_error(name, kind)
+    if kind is not None and info.kind != kind:
+        raise ValueError(
+            f"partitioner {name!r} is {info.kind}, not {kind} "
+            f"(registered {kind} algorithms: {', '.join(list_algorithms(kind))})"
+        )
+    return info
+
+
+def _register_all() -> None:
+    both = ("vertex", "edge")
+    entries = [
+        # ---- engine-backed canonical streaming partitioners (edge-cut)
+        PartitionerInfo(
+            "cuttana", "repro.core.cuttana:partition", "edge-cut", "buffered",
+            "engine", both, _STREAM_COMMON, CuttanaAlgoParams, telemetry=True,
+            description="CUTTANA: prioritized buffered streaming + coarsened refinement",
+        ),
+        PartitionerInfo(
+            "cuttana-batched", "repro.core.cuttana_batched:partition_batched",
+            "edge-cut", "immediate", "engine", both, _STREAM_COMMON,
+            CuttanaBatchedAlgoParams, telemetry=True,
+            description="chunk-parallel CUTTANA (stale histograms + sampling)",
+        ),
+        PartitionerInfo(
+            "cuttana-restream", "repro.core.restream:partition_restream",
+            "edge-cut", "restream", "engine", both, _STREAM_COMMON,
+            RestreamAlgoParams, telemetry=True,
+            description="restreaming with CUTTANA as the core partitioner",
+        ),
+        PartitionerInfo(
+            "fennel", "repro.core.fennel:partition", "edge-cut", "immediate",
+            "engine", both, _STREAM_COMMON, FennelAlgoParams,
+            fennel_params_fields=("gamma", "alpha_scale", "hybrid"),
+            telemetry=True,
+            description="FENNEL streaming partitioner (Eq. 7 baseline)",
+        ),
+        PartitionerInfo(
+            "ldg", "repro.core.ldg:partition", "edge-cut", "immediate",
+            "engine", both, _STREAM_COMMON, LDGAlgoParams, telemetry=True,
+            description="Linear Deterministic Greedy",
+        ),
+        PartitionerInfo(
+            "heistream", "repro.core.heistream_like:partition", "edge-cut",
+            "buffered", "engine", both, _STREAM_COMMON, HeiStreamAlgoParams,
+            telemetry=True,
+            description="HeiStream-like buffered batch streaming + FM refinement",
+        ),
+        # ---- trivial baselines
+        PartitionerInfo(
+            "random", "repro.core.random_hash:partition_random", "edge-cut",
+            "static", "none", (), ("seed",),
+            description="uniform random assignment",
+        ),
+        PartitionerInfo(
+            "hash", "repro.core.random_hash:partition_hash", "edge-cut",
+            "static", "none",
+            description="splitmix-style id hash",
+        ),
+        PartitionerInfo(
+            "chunked", "repro.core.random_hash:partition_chunked", "edge-cut",
+            "static", "none",
+            description="contiguous id ranges (range partitioning)",
+        ),
+        # ---- preserved seed loops (parity baselines / benchmarks)
+        PartitionerInfo(
+            "cuttana-legacy", "repro.core.legacy:cuttana_partition", "edge-cut",
+            "buffered", "legacy", both, _STREAM_COMMON, CuttanaAlgoParams,
+            forward_exclude=("chunk",),
+            description="seed per-vertex CUTTANA loop",
+        ),
+        PartitionerInfo(
+            "cuttana-batched-legacy", "repro.core.legacy:cuttana_batched_partition",
+            "edge-cut", "immediate", "legacy", both, _STREAM_COMMON,
+            CuttanaBatchedAlgoParams,
+            description="seed chunk-parallel CUTTANA loop",
+        ),
+        PartitionerInfo(
+            "fennel-legacy", "repro.core.legacy:fennel_partition", "edge-cut",
+            "immediate", "legacy", both, _STREAM_COMMON, FennelAlgoParams,
+            forward_exclude=("chunk",),
+            fennel_params_fields=("gamma", "alpha_scale", "hybrid"),
+            description="seed per-vertex FENNEL loop",
+        ),
+        PartitionerInfo(
+            "ldg-legacy", "repro.core.legacy:ldg_partition", "edge-cut",
+            "immediate", "legacy", both, _STREAM_COMMON,
+            description="seed per-vertex LDG loop",
+        ),
+        PartitionerInfo(
+            "heistream-legacy", "repro.core.legacy:heistream_partition",
+            "edge-cut", "buffered", "legacy", both, _STREAM_COMMON,
+            HeiStreamAlgoParams,
+            description="seed HeiStream-like loop",
+        ),
+        # ---- streaming edge partitioners (vertex-cut)
+        PartitionerInfo(
+            "hdrf", "repro.core.hdrf:partition_hdrf", "vertex-cut",
+            "immediate", "none", (), ("seed",), HDRFAlgoParams,
+            description="HDRF vertex-cut edge partitioner",
+        ),
+        PartitionerInfo(
+            "ginger", "repro.core.hdrf:partition_ginger", "vertex-cut",
+            "immediate", "none", (), ("seed",),
+            description="Ginger-like hybrid-cut edge partitioner",
+        ),
+    ]
+    for e in entries:
+        register(e)
+
+
+_register_all()
+
+
+def build_spec_kwargs(info: PartitionerInfo, spec: Any) -> dict:
+    """Keyword arguments that reproduce ``spec`` through ``info.resolve()``.
+
+    Values equal the callable's own defaults when the params block is
+    default-constructed, so a spec run is bit-identical to a bare call.
+    """
+    kwargs = {name: getattr(spec, name) for name in info.common}
+    if spec.params is not None:
+        block = dataclasses.asdict(spec.params)
+        for name in info.forward_exclude:
+            block.pop(name, None)
+        if info.fennel_params_fields:
+            from repro.core.base import FennelParams
+
+            fp = {f: block.pop(f) for f in info.fennel_params_fields}
+            kwargs["params"] = FennelParams(**fp)
+        kwargs.update(block)
+    return kwargs

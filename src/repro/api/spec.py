@@ -1,0 +1,189 @@
+"""``PartitionSpec``: a frozen, JSON-round-trippable partitioning request.
+
+A spec fully determines a partitioning run (algorithm, K, balance condition,
+stream order, seed, per-algorithm knobs) and is validated at construction
+against the declarative registry, so an invalid request fails *before* any
+graph is streamed. ``PartitionSpec.from_json(spec.to_json()) == spec`` holds
+for every registered algorithm - specs are the serializable unit for sweeps,
+restream chains, and the headless CLI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+from repro.api.registry import PartitionerInfo, get_info
+
+__all__ = ["PartitionSpec", "STREAM_ORDERS"]
+
+STREAM_ORDERS = ("natural", "random", "bfs", "dfs")
+_BALANCE_MODES = ("vertex", "edge")
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionSpec:
+    """Declarative request: ``partition(graph, spec) -> PartitionResult``.
+
+    ``params`` may be given as the algorithm's typed params dataclass, a
+    plain dict of its fields, or None (defaults); it is normalized to the
+    typed block at construction so equality and JSON round-trips are exact.
+    """
+
+    algo: str
+    k: int
+    epsilon: float = 0.05
+    balance_mode: str = "edge"
+    order: str = "natural"
+    seed: int = 0
+    params: Any = None
+
+    def __post_init__(self) -> None:
+        info = get_info(self.algo)
+        if not isinstance(self.k, int) or isinstance(self.k, bool) or self.k < 1:
+            raise ValueError(f"k must be a positive integer, got {self.k!r}")
+        if (
+            not isinstance(self.epsilon, (int, float))
+            or isinstance(self.epsilon, bool)
+            or self.epsilon < 0
+        ):
+            raise ValueError(f"epsilon must be a number >= 0, got {self.epsilon!r}")
+        if not isinstance(self.seed, int) or isinstance(self.seed, bool):
+            raise ValueError(f"seed must be an integer, got {self.seed!r}")
+        if self.balance_mode not in _BALANCE_MODES:
+            raise ValueError(
+                f"unknown balance_mode {self.balance_mode!r}; "
+                f"expected one of {_BALANCE_MODES}"
+            )
+        if info.balance_modes and self.balance_mode not in info.balance_modes:
+            raise ValueError(
+                f"{self.algo!r} supports balance modes {info.balance_modes}, "
+                f"got {self.balance_mode!r}"
+            )
+        if self.order not in STREAM_ORDERS:
+            raise ValueError(
+                f"unknown stream order {self.order!r}; expected one of "
+                f"{STREAM_ORDERS}"
+            )
+        # a knob the algorithm does not consume must stay at its default -
+        # otherwise two different specs would silently produce the same run
+        # (seed is exempt: "may not matter" is its understood contract)
+        for name in ("epsilon", "balance_mode", "order"):
+            applicable = name in info.common or (
+                name == "balance_mode" and bool(info.balance_modes)
+            )
+            if not applicable:
+                default = type(self).__dataclass_fields__[name].default
+                if getattr(self, name) != default:
+                    raise ValueError(
+                        f"{self.algo!r} does not use {name!r} "
+                        f"(accepted spec fields: {info.common or ('none',)}); "
+                        f"leave it at its default {default!r}"
+                    )
+        object.__setattr__(self, "params", _normalize_params(info, self.params))
+
+    # ------------------------------------------------------------ properties
+    @property
+    def info(self) -> PartitionerInfo:
+        return get_info(self.algo)
+
+    # --------------------------------------------------------- serialization
+    def to_dict(self) -> dict:
+        d = {
+            "algo": self.algo,
+            "k": self.k,
+            "epsilon": self.epsilon,
+            "balance_mode": self.balance_mode,
+            "order": self.order,
+            "seed": self.seed,
+        }
+        if self.params is not None:
+            d["params"] = dataclasses.asdict(self.params)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PartitionSpec":
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(
+                f"unknown PartitionSpec fields {sorted(unknown)}; "
+                f"expected a subset of {sorted(known)}"
+            )
+        if "algo" not in d or "k" not in d:
+            raise ValueError("PartitionSpec requires at least 'algo' and 'k'")
+        return cls(**d)
+
+    def to_json(self, indent: int | None = None) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "PartitionSpec":
+        d = json.loads(s)
+        if not isinstance(d, dict):
+            raise ValueError("PartitionSpec JSON must be an object")
+        return cls.from_dict(d)
+
+    def replace(self, **changes) -> "PartitionSpec":
+        return dataclasses.replace(self, **changes)
+
+
+def _normalize_params(info: PartitionerInfo, params: Any):
+    cls = info.params_cls
+    if cls is None:
+        if params is None or params == {}:
+            return None
+        raise ValueError(f"{info.name!r} takes no per-algorithm params")
+    if params is None:
+        return cls()
+    if isinstance(params, cls):
+        return _check_param_types(info, params)
+    if isinstance(params, dict):
+        valid = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(params) - valid
+        if unknown:
+            raise ValueError(
+                f"unknown {info.name!r} params {sorted(unknown)}; "
+                f"valid fields: {sorted(valid)}"
+            )
+        return _check_param_types(info, cls(**params))
+    raise ValueError(
+        f"params for {info.name!r} must be a dict or {cls.__name__}, "
+        f"got {type(params).__name__}"
+    )
+
+
+# field annotations in the params blocks (all from-__future__ strings)
+_FIELD_TYPES = {
+    "int": int,
+    "float": (int, float),
+    "bool": bool,
+    "str": str,
+}
+
+
+def _check_param_types(info: PartitionerInfo, block: Any):
+    """Field-by-field value typing, so a bad spec (e.g. ``d_max: "big"`` in a
+    hand-edited JSON) fails at construction, not mid-stream."""
+    for field in dataclasses.fields(block):
+        value = getattr(block, field.name)
+        ann = field.type
+        allow_none = "None" in ann
+        if value is None:
+            if allow_none:
+                continue
+            raise ValueError(
+                f"{info.name!r} param {field.name!r} must be {ann}, got None"
+            )
+        expected = _FIELD_TYPES.get(ann.split(" |")[0].strip())
+        if expected is None:  # unmapped annotation: leave it to the callee
+            continue
+        ok = isinstance(value, expected)
+        if expected is not bool and isinstance(value, bool):
+            ok = False  # bool passes isinstance(int) but is never a knob value
+        if not ok:
+            raise ValueError(
+                f"{info.name!r} param {field.name!r} must be {ann}, "
+                f"got {type(value).__name__} {value!r}"
+            )
+    return block

@@ -1,16 +1,22 @@
 """The paper's contribution: CUTTANA and the partitioner zoo.
 
-``get_partitioner(name)`` returns a callable
-``fn(graph, k, epsilon=..., balance_mode=..., order=..., seed=...) -> part``.
+The canonical entry point is :mod:`repro.api` - build a
+:class:`~repro.api.PartitionSpec` and call :func:`repro.api.partition` to get
+a uniform :class:`~repro.api.PartitionResult` for any registered algorithm.
+The declarative registry (:mod:`repro.api.registry`) is the single source of
+truth for the zoo; ``PARTITIONERS`` / ``EDGE_PARTITIONERS`` and
+``get_partitioner`` / ``get_edge_partitioner`` below are thin deprecated
+shims kept for existing callers and parity tests.
+
 Every streaming partitioner routes its streaming phase through the unified
 :class:`repro.core.engine.StreamEngine`; the seed per-vertex loops survive
 under ``*-legacy`` names (from :mod:`repro.core.legacy`) as parity baselines
 and benchmark reference points. Edge partitioners (vertex-cut) live in
-:mod:`repro.core.hdrf` and return an :class:`EdgePartition` via
-``get_edge_partitioner``.
+:mod:`repro.core.hdrf` and return an :class:`EdgePartition`.
 """
 from __future__ import annotations
 
+from repro.api.registry import REGISTRY, get_info
 from repro.core import cuttana, fennel, heistream_like, ldg, legacy
 from repro.core.base import FennelParams
 from repro.core.cuttana import CuttanaResult, refine_any
@@ -28,44 +34,31 @@ from repro.core.engine import (
 from repro.core.hdrf import EdgePartition, partition_ginger, partition_hdrf
 from repro.core.random_hash import partition_chunked, partition_hash, partition_random
 
-def _restream(graph, k, **kw):
-    from repro.core.restream import partition_restream
-
-    kw.setdefault("base", "cuttana")
-    return partition_restream(graph, k, **kw)
-
-
+# Legacy name -> callable views of the declarative registry (deprecated;
+# prefer repro.api). Resolved eagerly so iteration keeps working.
 PARTITIONERS = {
-    # engine-backed (canonical)
-    "cuttana": cuttana.partition,
-    "cuttana-batched": partition_batched,
-    "cuttana-restream": _restream,
-    "fennel": fennel.partition,
-    "ldg": ldg.partition,
-    "heistream": heistream_like.partition,
-    "random": partition_random,
-    "hash": partition_hash,
-    "chunked": partition_chunked,
-    # seed per-vertex reference loops (parity baselines / benchmarks)
-    "cuttana-legacy": legacy.cuttana_partition,
-    "cuttana-batched-legacy": legacy.cuttana_batched_partition,
-    "fennel-legacy": legacy.fennel_partition,
-    "ldg-legacy": legacy.ldg_partition,
-    "heistream-legacy": legacy.heistream_partition,
+    name: info.resolve()
+    for name, info in REGISTRY.items()
+    if info.kind == "edge-cut"
 }
 
 EDGE_PARTITIONERS = {
-    "hdrf": partition_hdrf,
-    "ginger": partition_ginger,
+    name: info.resolve()
+    for name, info in REGISTRY.items()
+    if info.kind == "vertex-cut"
 }
 
 
 def get_partitioner(name: str):
-    return PARTITIONERS[name]
+    """Deprecated shim over :func:`repro.api.get_info`: returns the bare
+    callable for an edge-cut (vertex) partitioner. Unknown names raise a
+    ``ValueError`` listing registered algorithms and the nearest match."""
+    return get_info(name, kind="edge-cut").resolve()
 
 
 def get_edge_partitioner(name: str):
-    return EDGE_PARTITIONERS[name]
+    """Deprecated shim: bare callable for a vertex-cut (edge) partitioner."""
+    return get_info(name, kind="vertex-cut").resolve()
 
 
 __all__ = [

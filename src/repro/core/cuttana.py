@@ -40,6 +40,13 @@ from repro.graph.csr import CSRGraph
 
 @dataclasses.dataclass
 class CuttanaResult:
+    """Compat container for ``return_detail=True`` callers.
+
+    Deprecated: the canonical surface is :func:`repro.api.partition`, which
+    folds these fields into ``PartitionResult.telemetry`` / ``.timings`` so
+    every algorithm returns one uniform type.
+    """
+
     part: np.ndarray
     sub_of: np.ndarray
     sub_part: np.ndarray  # final partition of each sub-partition
@@ -69,10 +76,15 @@ def partition(
     chunk: int = 512,
     use_pallas: bool | None = None,
     interpret: bool = False,
+    telemetry: dict | None = None,
 ):
     """Full CUTTANA partitioner. Ablations: ``use_buffer=False`` /
     ``use_refinement=False`` reproduce the paper's Table III rows
-    (both off == plain FENNEL with Eq. 7 scoring)."""
+    (both off == plain FENNEL with Eq. 7 scoring).
+
+    ``telemetry`` (if given) receives engine counters, phase wall times, and
+    refinement stats; ``return_detail=True`` is the compat flag that instead
+    returns the legacy :class:`CuttanaResult`."""
     n = graph.num_vertices
     if max_qsize is None:
         max_qsize = max(1024, n // 10)  # paper: 1e6 for 10^7..10^8-vertex graphs
@@ -134,6 +146,15 @@ def partition(
         part = sub_part[sub_of].astype(np.int32)
     phase2_s = time.perf_counter() - t1
 
+    if telemetry is not None:
+        telemetry.update(engine.telemetry)
+        telemetry.update(
+            phase1_seconds=phase1_s,
+            phase2_seconds=phase2_s,
+            refine_moves=moves,
+            refine_improvement=improvement,
+            subpartitions=int(kp),
+        )
     if return_detail:
         return CuttanaResult(
             part=part,

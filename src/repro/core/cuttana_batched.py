@@ -21,6 +21,8 @@ Phase 2 (refinement) is unchanged - it is already graph-size independent.
 """
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
 from repro.core.base import FennelParams, PartitionState, finalize
@@ -44,6 +46,7 @@ def partition_batched(
     seed: int = 0,
     use_pallas: bool | None = None,
     interpret: bool = False,
+    telemetry: dict | None = None,
 ) -> np.ndarray:
     n = graph.num_vertices
     state = PartitionState.create(graph, k, epsilon, balance_mode, seed)
@@ -54,6 +57,7 @@ def partition_batched(
         epsilon=max(epsilon, 0.10), balance_mode=balance_mode, seed=seed,
     )
     params = FennelParams(hybrid=(balance_mode == "edge"))
+    t0 = time.perf_counter()
     engine = StreamEngine(
         graph,
         state,
@@ -71,8 +75,11 @@ def partition_batched(
         ),
     )
     engine.run()
+    stream_s = time.perf_counter() - t0
 
     part = finalize(state)
+    moves, improvement = 0, 0.0
+    t1 = time.perf_counter()
     if use_refinement and k > 1:
         w = build_subpartition_graph(graph, subp.sub_of, subp.kp)
         sub_part = np.repeat(np.arange(k, dtype=np.int64), subp.s)
@@ -81,6 +88,16 @@ def partition_batched(
         else:
             size, total = subp.sub_v_counts, float(n)
         r = Refiner(w, sub_part, size, k, epsilon, total_mass=total)
-        r.refine(thresh=thresh)
+        stats = r.refine(thresh=thresh)
+        moves, improvement = stats.moves, stats.cut_improvement
         part = r.sub_part[subp.sub_of].astype(np.int32)
+    if telemetry is not None:
+        telemetry.update(engine.telemetry)
+        telemetry.update(
+            stream_seconds=stream_s,
+            refine_seconds=time.perf_counter() - t1,
+            refine_moves=moves,
+            refine_improvement=improvement,
+            subpartitions=int(subp.kp),
+        )
     return part

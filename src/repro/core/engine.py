@@ -198,6 +198,11 @@ class LDGScorer:
 
     def affine_update(self, v_p: float, e_p: float):
         lp = v_p if self.balance_mode == "vertex" else e_p
+        if self._cap == 0.0:
+            # edgeless graph in edge mode: numpy's 0/0 gives nan, which sinks
+            # every score and triggers the least-loaded fallback; plain python
+            # would raise instead, so reproduce the nan path explicitly
+            return float("nan"), -(1e-9 * lp)
         f = 1.0 - lp / self._cap
         if f < 0.0:
             f = 0.0
@@ -433,6 +438,7 @@ class BufferedPolicy:
         self.buffer = buf
         part_of = state.part_of
         d_max = self.d_max
+        evictions = drained = bypass = peak = 0
 
         def cascade(v: int, nbrs: np.ndarray) -> None:
             worklist = [(v, nbrs)]
@@ -448,6 +454,7 @@ class BufferedPolicy:
                 continue  # already placed via complete-eviction cascade
             nbrs = indices[indptr[v] : indptr[v + 1]]
             if nbrs.size >= d_max:
+                bypass += 1
                 cascade(v, nbrs)
                 continue
             assigned = int((part_of[nbrs] != -1).sum())
@@ -455,12 +462,22 @@ class BufferedPolicy:
                 cascade(v, nbrs)  # complete already
                 continue
             buf.push(v, nbrs, assigned)
+            if len(buf) > peak:
+                peak = len(buf)
             if buf.full:
                 u, un = buf.pop_best()
+                evictions += 1
                 cascade(u, un)
         while len(buf):
             u, un = buf.pop_best()
+            drained += 1
             cascade(u, un)
+        eng.telemetry.update(
+            buffer_evictions=evictions,
+            buffer_drained=drained,
+            buffer_peak=peak,
+            degree_bypass=bypass,
+        )
 
 
 # ------------------------------------------------------------------- engine
@@ -496,6 +513,10 @@ class StreamEngine:
         self.config = config or EngineConfig()
         self.ids = stream_order(graph, order, seed) if ids is None else ids
         self.on_chunk_end = on_chunk_end
+        # run counters consumed by repro.api's PartitionResult telemetry:
+        # kernel_calls counts fused chunk-histogram calls, single_place_calls
+        # the host-scored placements (buffered policy); policies add their own
+        self.telemetry: dict = {"kernel_calls": 0, "single_place_calls": 0}
         self._sample_rng = np.random.default_rng(seed)
         self._pos = np.full(graph.num_vertices, -1, dtype=np.int64)
         self._zero_sizes = np.zeros(state.k, dtype=np.float32)
@@ -511,6 +532,7 @@ class StreamEngine:
         """Score + place one vertex against the *fresh* state (used by the
         buffered policy, whose placement order is data-dependent)."""
         state = self.state
+        self.telemetry["single_place_calls"] += 1
         hist = state.neighbor_histogram(nbrs)
         scores = self.scorer.scores(state, hist)
         allowed = ~state.would_overflow(nbrs.size)
@@ -542,6 +564,7 @@ class StreamEngine:
         c = batch.shape[0]
         if c == 0:
             return np.zeros((0, state.k), dtype=np.float64), None
+        self.telemetry["kernel_calls"] += 1
         max_deg = int(degs.max())
         w = max(max_deg, 1)
         if not cfg.exact:

@@ -10,6 +10,8 @@ kernel-backed scoring, bit-identical to the seed per-vertex loop kept in
 """
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
 from repro.core.base import FennelParams, PartitionState, finalize
@@ -28,9 +30,11 @@ def partition(
     chunk: int = 512,
     use_pallas: bool | None = None,
     interpret: bool = False,
+    telemetry: dict | None = None,
 ) -> np.ndarray:
     params = params or FennelParams()
     state = PartitionState.create(graph, k, epsilon, balance_mode, seed)
+    t0 = time.perf_counter()
     engine = StreamEngine(
         graph,
         state,
@@ -41,4 +45,7 @@ def partition(
         config=EngineConfig(chunk=chunk, use_pallas=use_pallas, interpret=interpret),
     )
     engine.run()
+    if telemetry is not None:
+        telemetry.update(engine.telemetry)
+        telemetry["stream_seconds"] = time.perf_counter() - t0
     return finalize(state)

@@ -15,6 +15,8 @@ The greedy placement phase is a :class:`repro.core.engine.StreamEngine` chunk
 """
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
 from repro.core.base import FennelParams, PartitionState, finalize
@@ -33,13 +35,16 @@ def partition(
     seed: int = 0,
     use_pallas: bool | None = None,
     interpret: bool = False,
+    telemetry: dict | None = None,
 ) -> np.ndarray:
     state = PartitionState.create(graph, k, epsilon, balance_mode, seed)
     indptr, indices = graph.indptr, graph.indices
     rng = np.random.default_rng(seed)
+    fm_moves = 0
 
     def fm_refine(eng: StreamEngine, batch: np.ndarray, nbr_views: list) -> None:
         # ---- FM-style refinement inside the batch
+        nonlocal fm_moves
         for _ in range(fm_passes):
             moved = 0
             for v in rng.permutation(batch):
@@ -63,11 +68,13 @@ def partition(
                     state.e_counts[cur] -= deg
                     state.e_counts[best] += deg
                     moved += 1
+            fm_moves += moved
             if moved == 0:
                 break
         # FM moved mass behind the scorer's back - refresh its penalty cache
         eng.scorer.begin(state)
 
+    t0 = time.perf_counter()
     engine = StreamEngine(
         graph,
         state,
@@ -83,4 +90,9 @@ def partition(
         on_chunk_end=fm_refine,
     )
     engine.run()
+    if telemetry is not None:
+        telemetry.update(engine.telemetry)
+        telemetry.update(
+            stream_seconds=time.perf_counter() - t0, fm_moves=fm_moves
+        )
     return finalize(state)

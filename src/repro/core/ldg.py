@@ -8,6 +8,8 @@ kernel-backed scoring, bit-identical to the seed per-vertex loop kept in
 """
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
 from repro.core.base import PartitionState, finalize
@@ -25,8 +27,10 @@ def partition(
     chunk: int = 512,
     use_pallas: bool | None = None,
     interpret: bool = False,
+    telemetry: dict | None = None,
 ) -> np.ndarray:
     state = PartitionState.create(graph, k, epsilon, balance_mode, seed)
+    t0 = time.perf_counter()
     engine = StreamEngine(
         graph,
         state,
@@ -37,4 +41,7 @@ def partition(
         config=EngineConfig(chunk=chunk, use_pallas=use_pallas, interpret=interpret),
     )
     engine.run()
+    if telemetry is not None:
+        telemetry.update(engine.telemetry)
+        telemetry["stream_seconds"] = time.perf_counter() - t0
     return finalize(state)

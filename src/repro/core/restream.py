@@ -14,9 +14,11 @@ move corrections, bit-identical to the seed loop in
 """
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
-from repro.core import get_partitioner
+from repro.api.registry import get_info
 from repro.core.base import FennelParams, PartitionState
 from repro.core.cuttana import refine_any
 from repro.core.engine import EngineConfig, FennelScorer, ImmediatePolicy, StreamEngine
@@ -36,11 +38,19 @@ def partition_restream(
     chunk: int = 512,
     use_pallas: bool | None = None,
     interpret: bool = False,
+    telemetry: dict | None = None,
 ) -> np.ndarray:
-    part = get_partitioner(base)(
+    t0 = time.perf_counter()
+    base_info = get_info(base, kind="edge-cut")
+    base_telemetry: dict = {}
+    base_kwargs = {"telemetry": base_telemetry} if base_info.telemetry else {}
+    part = base_info.resolve()(
         graph, k, epsilon=epsilon, balance_mode=balance_mode,
-        order=order, seed=seed,
+        order=order, seed=seed, **base_kwargs,
     )
+    base_s = time.perf_counter() - t0
+    kernel_calls = base_telemetry.get("kernel_calls", 0)
+    t0 = time.perf_counter()
     deg = graph.degrees
     params = FennelParams(hybrid=(balance_mode == "edge"))
     for p in range(1, passes):
@@ -62,10 +72,29 @@ def partition_restream(
             ),
         )
         engine.run()
+        kernel_calls += engine.telemetry["kernel_calls"]
         part = state.part_of.copy()
+    stream_s = time.perf_counter() - t0
+    t1 = time.perf_counter()
     if final_refine and k > 1:
         part = refine_any(
             graph, part, k, epsilon=epsilon, balance_mode=balance_mode,
             seed=seed,
         )
+    if telemetry is not None:
+        telemetry.update(
+            passes=passes,
+            base=base,
+            kernel_calls=kernel_calls,
+            base_seconds=base_s,
+            stream_seconds=stream_s,
+            refine_seconds=time.perf_counter() - t1,
+        )
+        if base_telemetry:
+            # the base run's full counters (buffer evictions, refine moves,
+            # ...) survive namespaced; kernel_calls above already sums them
+            telemetry["base_telemetry"] = {
+                key: val for key, val in base_telemetry.items()
+                if not key.endswith("_seconds")
+            }
     return part

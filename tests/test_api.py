@@ -1,0 +1,411 @@
+"""The typed PartitionSpec -> PartitionResult surface (repro.api).
+
+Pins the acceptance criteria of the api redesign: JSON round-trips for every
+registered algorithm, bit-identical parity between spec runs and the bare
+callables, lazy+cached quality metrics, telemetry plumbing, the deprecated
+``get_partitioner`` shim, and the headless CLI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    REGISTRY,
+    PartitionSpec,
+    get_info,
+    list_algorithms,
+    partition,
+)
+from repro.api.registry import build_spec_kwargs
+from repro.core import (
+    EDGE_PARTITIONERS,
+    PARTITIONERS,
+    get_edge_partitioner,
+    get_partitioner,
+)
+from repro.graph import rmat_graph
+
+K = 4
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return rmat_graph(800, avg_degree=8, seed=3)
+
+
+def _parity_cases():
+    for name in sorted(REGISTRY):
+        info = REGISTRY[name]
+        for mode in info.balance_modes or ("edge",):
+            yield name, mode
+
+
+# ------------------------------------------------------------------ registry
+def test_registry_covers_legacy_dicts():
+    assert set(PARTITIONERS) == set(list_algorithms("edge-cut"))
+    assert set(EDGE_PARTITIONERS) == set(list_algorithms("vertex-cut"))
+    for name, fn in PARTITIONERS.items():
+        assert get_partitioner(name) is fn
+        assert REGISTRY[name].resolve() is fn
+    for name, fn in EDGE_PARTITIONERS.items():
+        assert get_edge_partitioner(name) is fn
+
+
+def test_unknown_name_lists_registry_and_nearest_match():
+    with pytest.raises(ValueError, match=r"fennel"):
+        get_partitioner("fenel")
+    with pytest.raises(ValueError, match=r"registered"):
+        get_partitioner("definitely-not-an-algo")
+    with pytest.raises(ValueError, match=r"hdrf"):
+        get_edge_partitioner("hdrff")
+    # kind mismatch is its own clear error, not a KeyError
+    with pytest.raises(ValueError, match=r"vertex-cut"):
+        get_partitioner("hdrf")
+
+
+# ---------------------------------------------------------------------- spec
+def test_spec_json_round_trip_all_algorithms():
+    for name in sorted(REGISTRY):
+        info = REGISTRY[name]
+        mode = (info.balance_modes or ("edge",))[0]
+        spec = PartitionSpec(algo=name, k=3, balance_mode=mode, seed=7)
+        assert PartitionSpec.from_json(spec.to_json()) == spec
+        if info.params_cls is not None:
+            # flip one field away from its default and round-trip again
+            field = dataclasses.fields(info.params_cls)[0]
+            default = getattr(info.params_cls(), field.name)
+            bumped = {
+                field.name: (not default) if isinstance(default, bool)
+                else (default or 1) * 2
+            }
+            spec2 = PartitionSpec(algo=name, k=3, balance_mode=mode,
+                                  params=bumped)
+            assert PartitionSpec.from_json(spec2.to_json()) == spec2
+            assert spec2 != spec
+
+
+def test_spec_normalizes_params_dict():
+    spec = PartitionSpec(algo="cuttana", k=4, params={"d_max": 50})
+    assert spec.params.d_max == 50
+    assert spec.params.use_buffer is True  # other fields keep defaults
+    typed = PartitionSpec(algo="cuttana", k=4,
+                          params=type(spec.params)(d_max=50))
+    assert typed == spec
+
+
+def test_spec_validation_errors():
+    with pytest.raises(ValueError, match="fennel"):
+        PartitionSpec(algo="fenel", k=4)
+    with pytest.raises(ValueError, match="positive integer"):
+        PartitionSpec(algo="fennel", k=0)
+    with pytest.raises(ValueError, match="balance"):
+        PartitionSpec(algo="fennel", k=4, balance_mode="degrees")
+    with pytest.raises(ValueError, match="order"):
+        PartitionSpec(algo="fennel", k=4, order="sorted")
+    with pytest.raises(ValueError, match="valid fields"):
+        PartitionSpec(algo="cuttana", k=4, params={"dmax": 10})
+    # values are type-checked field-by-field at construction, not mid-stream
+    with pytest.raises(ValueError, match="d_max"):
+        PartitionSpec(algo="cuttana", k=4, params={"d_max": "big"})
+    with pytest.raises(ValueError, match="use_buffer"):
+        PartitionSpec(algo="cuttana", k=4, params={"use_buffer": 3})
+    with pytest.raises(ValueError, match="max_qsize"):
+        PartitionSpec(algo="cuttana", k=4, params={"max_qsize": 1.5})
+    with pytest.raises(ValueError, match="base"):
+        PartitionSpec(algo="cuttana-restream", k=4, params={"base": 7})
+    with pytest.raises(ValueError, match="no per-algorithm params"):
+        PartitionSpec(algo="random", k=4, params={"x": 1})
+    with pytest.raises(ValueError, match="unknown PartitionSpec fields"):
+        PartitionSpec.from_dict({"algo": "fennel", "k": 4, "kk": 8})
+    # top-level scalars are type-checked too (hand-edited JSON specs)
+    with pytest.raises(ValueError, match="seed"):
+        PartitionSpec(algo="fennel", k=4, seed="7")
+    with pytest.raises(ValueError, match="epsilon"):
+        PartitionSpec(algo="fennel", k=4, epsilon="0.05")
+    # a knob the algorithm ignores cannot be set away from its default
+    with pytest.raises(ValueError, match="does not use 'order'"):
+        PartitionSpec(algo="hdrf", k=4, order="bfs")
+    with pytest.raises(ValueError, match="does not use 'epsilon'"):
+        PartitionSpec(algo="random", k=4, epsilon=0.5)
+    with pytest.raises(ValueError, match="does not use 'balance_mode'"):
+        PartitionSpec(algo="chunked", k=4, balance_mode="vertex")
+
+
+def test_spec_round_trip_property():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    algos = list_algorithms()
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        algo=st.sampled_from(algos),
+        k=st.integers(min_value=1, max_value=64),
+        epsilon=st.floats(min_value=0.0, max_value=2.0, allow_nan=False),
+        order=st.sampled_from(("natural", "random", "bfs", "dfs")),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+        mode_idx=st.integers(min_value=0, max_value=1),
+    )
+    def round_trips(algo, k, epsilon, order, seed, mode_idx):
+        info = get_info(algo)
+        modes = info.balance_modes or ("edge",)
+        spec = PartitionSpec(
+            algo=algo, k=k, seed=seed,
+            epsilon=epsilon if "epsilon" in info.common else 0.05,
+            order=order if "order" in info.common else "natural",
+            balance_mode=modes[mode_idx % len(modes)],
+        )
+        assert PartitionSpec.from_json(spec.to_json()) == spec
+
+    round_trips()
+
+
+# -------------------------------------------------------------------- parity
+@pytest.mark.parametrize("name,mode", _parity_cases())
+def test_spec_run_matches_bare_callable(graph, name, mode):
+    """Acceptance: every registry algorithm is runnable via PartitionSpec and
+    the assignment is bit-identical to the legacy callable under the same
+    seed/order."""
+    info = REGISTRY[name]
+    kwargs = dict(algo=name, k=K, balance_mode=mode, seed=0)
+    if "order" in info.common:
+        kwargs["order"] = "random"
+    spec = PartitionSpec(**kwargs)
+    result = partition(graph, spec)
+    bare_kwargs = {key: getattr(spec, key) for key in info.common}
+    bare = info.resolve()(graph, K, **bare_kwargs)
+    expected = bare.edge_part if info.kind == "vertex-cut" else np.asarray(bare)
+    assert np.array_equal(result.assignment, expected)
+    assert result.spec == spec
+    assert result.timings["total_s"] >= 0.0
+    if info.kind == "vertex-cut":
+        assert result.edge_partition is not None
+        assert result.vertex_assignment().shape == (graph.num_vertices,)
+    else:
+        assert result.assignment.shape == (graph.num_vertices,)
+
+
+def test_spec_run_respects_params_block(graph):
+    full = partition(graph, PartitionSpec(algo="cuttana", k=K, seed=0))
+    ablated = partition(graph, PartitionSpec(
+        algo="cuttana", k=K, seed=0,
+        params={"use_refinement": False, "use_buffer": False},
+    ))
+    bare = PARTITIONERS["cuttana"](
+        graph, K, use_refinement=False, use_buffer=False,
+        balance_mode="edge", epsilon=0.05, order="natural", seed=0,
+    )
+    assert np.array_equal(ablated.assignment, bare)
+    assert ablated.telemetry["refine_moves"] == 0
+    assert full.telemetry["refine_moves"] >= 0
+
+
+# ----------------------------------------------------------- result surface
+def test_quality_is_lazy_and_cached(graph, monkeypatch):
+    import repro.graph.metrics as metrics
+
+    calls = {"n": 0}
+    real = metrics.quality_report
+
+    def counting(*args, **kwargs):
+        calls["n"] += 1
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(metrics, "quality_report", counting)
+    result = partition(graph, PartitionSpec(algo="ldg", k=K))
+    assert calls["n"] == 0  # nothing computed until asked
+    q1 = result.quality()
+    q2 = result.quality()
+    assert calls["n"] == 1
+    assert q1 is q2
+    assert 0.0 <= q1["edge_cut"] <= 1.0
+
+
+def test_telemetry_and_timings(graph):
+    result = partition(graph, PartitionSpec(algo="cuttana", k=K))
+    assert "buffer_evictions" in result.telemetry
+    assert "buffer_peak" in result.telemetry
+    assert "refine_moves" in result.telemetry
+    assert "phase1_seconds" in result.timings
+    assert "phase2_seconds" in result.timings
+    batched = partition(graph, PartitionSpec(algo="cuttana-batched", k=K))
+    assert batched.telemetry["kernel_calls"] > 0
+    assert "stream_seconds" in batched.timings
+    restream = partition(graph, PartitionSpec(
+        algo="cuttana-restream", k=K, params={"passes": 2}))
+    # base pass kernel/host scoring is attributed, and its wall time is
+    # separated from the re-pass stream time
+    assert restream.telemetry["kernel_calls"] > 0
+    assert "base_seconds" in restream.timings
+    assert "stream_seconds" in restream.timings
+    # the buffered base run's counters survive, namespaced
+    assert "buffer_evictions" in restream.telemetry["base_telemetry"]
+
+
+def test_cuttana_compat_flag_and_telemetry_agree(graph):
+    from repro.core.cuttana import CuttanaResult, partition as cuttana
+
+    telemetry = {}
+    detail = cuttana(graph, K, seed=0, return_detail=True, telemetry=telemetry)
+    assert isinstance(detail, CuttanaResult)
+    assert telemetry["refine_moves"] == detail.refine_moves
+    assert telemetry["refine_improvement"] == detail.refine_improvement
+    result = partition(graph, PartitionSpec(algo="cuttana", k=K, seed=0))
+    assert np.array_equal(result.assignment, detail.part)
+    assert result.telemetry["refine_moves"] == detail.refine_moves
+
+
+def test_partition_shortcuts(graph):
+    by_name = partition(graph, "fennel", k=K, balance_mode="vertex", seed=1)
+    by_dict = partition(graph, {"algo": "fennel", "k": K,
+                                "balance_mode": "vertex", "seed": 1})
+    assert np.array_equal(by_name.assignment, by_dict.assignment)
+    assert by_name.spec == by_dict.spec
+
+
+def test_downstream_adapters(graph):
+    result = partition(graph, PartitionSpec(algo="fennel", k=2))
+    cost = result.analytics(program="pagerank", iters=5, mode="model")
+    assert cost["total_s"] > 0
+    sim = result.analytics(program="pagerank", iters=2, mode="simulated")
+    assert sim["values"].shape == (graph.num_vertices,)
+    assert sim["halo_messages_per_iter"] >= 0
+    db = result.db(hops=2, num_queries=32)
+    assert db["qps"] > 0 and db["p99_latency_ms"] > 0
+    # a precomputed query mix is reused verbatim
+    from repro.db import ldbc_query_mix
+
+    seeds = ldbc_query_mix(graph, 32, seed=0)
+    assert result.db(hops=2, seeds=seeds) == result.db(hops=2, num_queries=32)
+    # results hold ndarrays but still support ==/in without raising
+    assert result != partition(graph, PartitionSpec(algo="fennel", k=2))
+    assert result in [result]
+    with pytest.raises(ValueError, match="mode"):
+        result.analytics(mode="imaginary")
+    with pytest.raises(ValueError, match="hops"):
+        result.db(hops=3)
+
+
+def test_vertex_cut_result_quality_and_db(graph):
+    result = partition(graph, PartitionSpec(algo="hdrf", k=K, seed=0))
+    q = result.quality()
+    assert q["kind"] == "vertex-cut"
+    assert q["replication_factor"] >= 1.0
+    # db routes through replica masters for vertex-cut results
+    db = result.db(hops=1, num_queries=16)
+    assert db["qps"] > 0
+    with pytest.raises(ValueError, match="vertex"):
+        result.analytics(mode="simulated")
+    assert result.analytics(mode="model")["total_s"] > 0
+
+
+def test_degenerate_graphs_via_spec():
+    """k=1 and edgeless graphs stay total through the spec surface (the
+    edge-mode LDG case used to hit a ZeroDivisionError in the affine fast
+    path where the legacy loop's nan sank into the least-loaded fallback)."""
+    from repro.graph.csr import CSRGraph
+
+    g = rmat_graph(300, avg_degree=6, seed=0)
+    one = partition(g, PartitionSpec(algo="cuttana", k=1))
+    assert one.assignment.max() == 0
+    assert one.quality()["edge_cut"] == 0.0
+    empty = CSRGraph.from_edges(np.zeros((0, 2), dtype=int), num_vertices=40)
+    for algo in ("fennel", "ldg", "cuttana", "heistream", "random", "chunked"):
+        info = REGISTRY[algo]
+        for mode in info.balance_modes or ("edge",):
+            kwargs = dict(algo=algo, k=3, balance_mode=mode)
+            if "epsilon" in info.common:
+                kwargs["epsilon"] = 0.5
+            result = partition(empty, PartitionSpec(**kwargs))
+            assert result.assignment.shape == (40,), (algo, mode)
+            legacy = REGISTRY.get(f"{algo}-legacy")
+            if legacy is not None:
+                ref = legacy.resolve()(empty, 3, epsilon=0.5, balance_mode=mode)
+                assert np.array_equal(result.assignment, ref), (algo, mode)
+
+
+def test_report_is_json_serializable(graph):
+    result = partition(graph, PartitionSpec(algo="cuttana", k=K))
+    report = result.to_report()
+    text = json.dumps(report)
+    back = json.loads(text)
+    assert back["spec"]["algo"] == "cuttana"
+    assert back["quality"]["kind"] == "edge-cut"
+    assert back["graph"]["num_vertices"] == graph.num_vertices
+
+
+def test_build_spec_kwargs_reproduce_defaults():
+    """The kwargs a default spec builds must equal the callable's own
+    defaults - that is what makes spec runs bit-identical to bare calls."""
+    import inspect
+
+    for name in sorted(REGISTRY):
+        info = REGISTRY[name]
+        spec = PartitionSpec(algo=name, k=2,
+                             balance_mode=(info.balance_modes or ("edge",))[0])
+        kwargs = build_spec_kwargs(info, spec)
+        sig = inspect.signature(info.resolve())
+        for key, value in kwargs.items():
+            assert key in sig.parameters or any(
+                p.kind is inspect.Parameter.VAR_KEYWORD
+                for p in sig.parameters.values()
+            ), f"{name}: unexpected kwarg {key}"
+            if key in sig.parameters and key in info.common:
+                continue  # common fields may legitimately differ per spec
+            if key in sig.parameters and key != "params":
+                default = sig.parameters[key].default
+                if default is not inspect.Parameter.empty:
+                    assert default == value, (
+                        f"{name}: params default drifted for {key}: "
+                        f"registry={value!r} callable={default!r}"
+                    )
+
+
+# ------------------------------------------------------------------------ CLI
+def _cli_env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+def test_cli_partition_smoke(tmp_path):
+    spec_path = tmp_path / "spec.json"
+    out_path = tmp_path / "report.json"
+    spec = PartitionSpec(algo="fennel", k=3, balance_mode="edge",
+                         order="random", seed=0)
+    spec_path.write_text(spec.to_json())
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.api.cli", "partition",
+         "--spec", str(spec_path), "--rmat", "600", "--avg-degree", "8",
+         "--out", str(out_path),
+         "--assignment-out", str(tmp_path / "assignment")],
+        env=_cli_env(), capture_output=True, text=True, timeout=300,
+    )
+    assert proc.returncode == 0, proc.stderr
+    report = json.loads(out_path.read_text())
+    assert report["spec"] == spec.to_dict()
+    assert report["graph"]["num_vertices"] == 600
+    assert 0.0 <= report["quality"]["edge_cut"] <= 1.0
+    assert report["timings"]["total_s"] > 0
+    # the recorded path is the one np.save actually wrote
+    saved = np.load(report["assignment_path"])
+    assert saved.shape == (600,)
+
+
+def test_cli_list_smoke():
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.api.cli", "list"],
+        env=_cli_env(), capture_output=True, text=True, timeout=120,
+    )
+    assert proc.returncode == 0, proc.stderr
+    for name in ("cuttana", "fennel", "hdrf"):
+        assert name in proc.stdout
