@@ -1,27 +1,36 @@
 """Paper Fig. 7: edge imbalance of vertex-balanced partitioners (the
-straggler problem CUTTANA's edge-balance mode fixes)."""
+straggler problem CUTTANA's edge-balance mode fixes). Runs entirely through
+``repro.api``: one ``PartitionSpec`` per cell, structured rows built from the
+``PartitionResult``."""
 from __future__ import annotations
 
-from benchmarks.common import emit, timed
-from repro.core import get_partitioner
-from repro.graph import edge_imbalance
+from benchmarks.common import emit
+from repro.api import PartitionSpec, partition
 from repro.graph.generators import load_dataset
+
+ALGOS = ("fennel", "ldg", "heistream", "cuttana")
 
 
 def run(k: int = 8, datasets=("social-s", "ldbc-s", "web-s"), seed: int = 0):
     rows = []
     for ds in datasets:
         graph = load_dataset(ds, seed=seed)
-        for name in ("fennel", "ldg", "heistream", "cuttana"):
+        for name in ALGOS:
             for balance in ("vertex", "edge"):
-                part, us = timed(
-                    get_partitioner(name), graph, k,
-                    epsilon=0.05, balance_mode=balance, order="random", seed=seed,
+                spec = PartitionSpec(
+                    algo=name, k=k, epsilon=0.05, balance_mode=balance,
+                    order="random", seed=seed,
                 )
-                imb = edge_imbalance(graph, part, k)
+                result = partition(graph, spec)
+                imb = result.quality()["edge_imbalance"]
                 rows.append(dict(dataset=ds, algo=name, balance=balance,
-                                 edge_imbalance=imb))
-                emit(f"imbalance/{ds}/{name}/{balance}", us, f"edge_imb={imb:.2f}")
+                                 edge_imbalance=imb, spec=spec.to_dict(),
+                                 seconds=result.timings["total_s"]))
+                emit(
+                    f"imbalance/{ds}/{name}/{balance}",
+                    result.timings["total_s"] * 1e6,
+                    f"edge_imb={imb:.2f}",
+                )
     return rows
 
 

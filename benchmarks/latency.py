@@ -1,32 +1,29 @@
 """Paper §IV-A partitioning-latency analysis + the kernel-backed
-chunk-parallel variant's speed/quality trade (beyond-paper)."""
+chunk-parallel variant's speed/quality trade (beyond-paper). Runs entirely
+through ``repro.api``: one ``PartitionSpec`` per cell, structured rows built
+from the ``PartitionResult``."""
 from __future__ import annotations
 
-from benchmarks.common import emit, timed
-from repro.core import get_partitioner
-from repro.core.cuttana_batched import partition_batched
-from repro.graph import edge_cut
+from benchmarks.common import emit
+from repro.api import PartitionSpec, partition
 from repro.graph.generators import load_dataset
+
+ALGOS = ("fennel", "ldg", "heistream", "cuttana", "cuttana-batched")
 
 
 def run(k: int = 8, dataset: str = "social-m", seed: int = 0):
     graph = load_dataset(dataset, seed=seed)
     rows = []
-    for name in ("fennel", "ldg", "heistream", "cuttana"):
-        part, us = timed(
-            get_partitioner(name), graph, k,
-            balance_mode="edge", order="random", seed=seed,
+    for name in ALGOS:
+        spec = PartitionSpec(
+            algo=name, k=k, balance_mode="edge", order="random", seed=seed,
         )
-        ec = edge_cut(graph, part)
-        rows.append(dict(algo=name, seconds=us / 1e6, edge_cut=ec))
-        emit(f"latency/{dataset}/{name}", us, f"edge_cut={ec:.4f}")
-    part, us = timed(
-        partition_batched, graph, k, balance_mode="edge", order="random",
-        seed=seed,
-    )
-    ec = edge_cut(graph, part)
-    rows.append(dict(algo="cuttana-batched", seconds=us / 1e6, edge_cut=ec))
-    emit(f"latency/{dataset}/cuttana-batched", us, f"edge_cut={ec:.4f}")
+        result = partition(graph, spec)
+        ec = result.quality()["edge_cut"]
+        seconds = result.timings["total_s"]
+        rows.append(dict(algo=name, seconds=seconds, edge_cut=ec,
+                         spec=spec.to_dict(), timings=result.timings))
+        emit(f"latency/{dataset}/{name}", seconds * 1e6, f"edge_cut={ec:.4f}")
     return rows
 
 

@@ -1,10 +1,13 @@
-"""Paper Fig. 6: quality as a function of the number of partitions."""
+"""Paper Fig. 6: quality as a function of the number of partitions. Runs
+entirely through ``repro.api``: one ``PartitionSpec`` per cell, structured
+rows built from the ``PartitionResult``."""
 from __future__ import annotations
 
-from benchmarks.common import emit, timed
-from repro.core import get_partitioner
-from repro.graph import edge_cut
+from benchmarks.common import emit
+from repro.api import PartitionSpec, partition
 from repro.graph.generators import load_dataset
+
+ALGOS = ("cuttana", "fennel", "heistream")
 
 
 def run(ks=(2, 4, 8, 16, 32), datasets=("social-s", "web-s"), seed: int = 0):
@@ -12,14 +15,21 @@ def run(ks=(2, 4, 8, 16, 32), datasets=("social-s", "web-s"), seed: int = 0):
     for ds in datasets:
         graph = load_dataset(ds, seed=seed)
         for k in ks:
-            for name in ("cuttana", "fennel", "heistream"):
-                part, us = timed(
-                    get_partitioner(name), graph, k,
-                    balance_mode="edge", order="random", seed=seed,
+            for name in ALGOS:
+                spec = PartitionSpec(
+                    algo=name, k=k, balance_mode="edge", order="random",
+                    seed=seed,
                 )
-                ec = edge_cut(graph, part)
-                rows.append(dict(dataset=ds, k=k, algo=name, edge_cut=ec))
-                emit(f"quality_vs_k/{ds}/k{k}/{name}", us, f"edge_cut={ec:.4f}")
+                result = partition(graph, spec)
+                ec = result.quality()["edge_cut"]
+                rows.append(dict(dataset=ds, k=k, algo=name, edge_cut=ec,
+                                 spec=spec.to_dict(),
+                                 seconds=result.timings["total_s"]))
+                emit(
+                    f"quality_vs_k/{ds}/k{k}/{name}",
+                    result.timings["total_s"] * 1e6,
+                    f"edge_cut={ec:.4f}",
+                )
     return rows
 
 

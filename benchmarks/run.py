@@ -37,6 +37,7 @@ def main() -> None:
         quality,
         quality_vs_k,
         roofline,
+        scaling,
     )
 
     suites = {
@@ -57,6 +58,9 @@ def main() -> None:
         ),
         "engine": lambda: engine_compare.run(
             n=30_000 if not args.full else 100_000
+        ),
+        "scaling": lambda: scaling.run(
+            n=20_000 if not args.full else 100_000
         ),
         "kernels": kernels.run,
         "roofline": roofline.run,

@@ -1,0 +1,69 @@
+"""Shard-parallel scaling study (paper §V: "a parallel version for CUTTANA
+that offers nearly the same partitioning latency as existing streaming
+partitioners").
+
+Sweeps ``num_shards`` for ``cuttana-parallel`` (and ``fennel-parallel``)
+against their sequential baselines on an R-MAT graph and reports the
+streaming-phase wall clock, edge-cut, and superstep telemetry - the
+latency-vs-quality trade of the bulk-synchronous relaxation. Rows are built
+from ``PartitionResult``s like every other api-driven suite.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.api import PartitionSpec, partition
+from repro.graph.generators import rmat_graph
+
+SHARDS = (1, 2, 4, 8)
+
+
+def _stream_seconds(result) -> float:
+    t = result.timings
+    return t.get("phase1_seconds", t.get("stream_seconds", t["total_s"]))
+
+
+def run(n: int = 50_000, avg_degree: int = 12, k: int = 8, seed: int = 0):
+    graph = rmat_graph(n, avg_degree=avg_degree, seed=seed)
+    rows = []
+    for algo, base in (("cuttana-parallel", "cuttana"),
+                       ("fennel-parallel", "fennel")):
+        base_spec = PartitionSpec(
+            algo=base, k=k, balance_mode="edge", order="random", seed=seed,
+        )
+        base_result = partition(graph, base_spec)
+        base_s = _stream_seconds(base_result)
+        base_ec = base_result.quality()["edge_cut"]
+        rows.append(dict(
+            algo=base, num_shards=0, stream_seconds=base_s, edge_cut=base_ec,
+            speedup=1.0, spec=base_spec.to_dict(),
+        ))
+        emit(f"scaling/rmat{n}/{base}", base_s * 1e6, f"edge_cut={base_ec:.4f}")
+        for num_shards in SHARDS:
+            spec = PartitionSpec(
+                algo=algo, k=k, balance_mode="edge", order="random",
+                seed=seed, params={"num_shards": num_shards},
+            )
+            result = partition(graph, spec)
+            secs = _stream_seconds(result)
+            ec = result.quality()["edge_cut"]
+            tel = result.telemetry
+            rows.append(dict(
+                algo=algo, num_shards=num_shards, stream_seconds=secs,
+                edge_cut=ec, speedup=base_s / max(secs, 1e-12),
+                edge_cut_ratio=ec / max(base_ec, 1e-12),
+                supersteps=tel.get("supersteps", 0),
+                sync_rounds=tel.get("sync_rounds", 0),
+                boundary_conflicts=tel.get("boundary_conflicts", 0),
+                spec=spec.to_dict(),
+            ))
+            emit(
+                f"scaling/rmat{n}/{algo}/s{num_shards}",
+                secs * 1e6,
+                f"edge_cut={ec:.4f};speedup={base_s / max(secs, 1e-12):.2f}x;"
+                f"conflicts={tel.get('boundary_conflicts', 0)}",
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

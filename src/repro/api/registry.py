@@ -30,6 +30,8 @@ __all__ = [
     "FennelAlgoParams",
     "LDGAlgoParams",
     "CuttanaAlgoParams",
+    "CuttanaParallelAlgoParams",
+    "FennelParallelAlgoParams",
     "CuttanaBatchedAlgoParams",
     "HeiStreamAlgoParams",
     "RestreamAlgoParams",
@@ -68,6 +70,33 @@ class CuttanaAlgoParams:
     use_refinement: bool = True
     thresh: float = 0.0
     max_moves: int | None = None
+    chunk: int = 512
+
+
+@dataclasses.dataclass(frozen=True)
+class CuttanaParallelAlgoParams:
+    """Shard-parallel CUTTANA (paper §V): ``num_shards`` interleaved shard
+    cursors with bulk-synchronous supersteps around the Algorithm 1 knobs."""
+
+    num_shards: int = 4
+    d_max: int = 1000
+    max_qsize: int | None = None
+    theta: float = 1.0
+    subparts_per_partition: int | None = None
+    use_refinement: bool = True
+    thresh: float = 0.0
+    max_moves: int | None = None
+    chunk: int = 512
+
+
+@dataclasses.dataclass(frozen=True)
+class FennelParallelAlgoParams:
+    """Bulk-synchronous parallel FENNEL: ``num_shards`` shard frontiers."""
+
+    num_shards: int = 4
+    gamma: float = 1.5
+    alpha_scale: float = 1.0
+    hybrid: bool = True
     chunk: int = 512
 
 
@@ -195,6 +224,21 @@ def _register_all() -> None:
             "edge-cut", "immediate", "engine", both, _STREAM_COMMON,
             CuttanaBatchedAlgoParams, telemetry=True,
             description="chunk-parallel CUTTANA (stale histograms + sampling)",
+        ),
+        PartitionerInfo(
+            "cuttana-parallel", "repro.core.parallel:partition_parallel",
+            "edge-cut", "buffered", "engine", both, _STREAM_COMMON,
+            CuttanaParallelAlgoParams, telemetry=True,
+            description="shard-parallel CUTTANA (S buffered shard frontiers, "
+                        "bulk-synchronous supersteps)",
+        ),
+        PartitionerInfo(
+            "fennel-parallel", "repro.core.parallel:fennel_parallel",
+            "edge-cut", "immediate", "engine", both, _STREAM_COMMON,
+            FennelParallelAlgoParams,
+            fennel_params_fields=("gamma", "alpha_scale", "hybrid"),
+            telemetry=True,
+            description="bulk-synchronous parallel FENNEL (S shard frontiers)",
         ),
         PartitionerInfo(
             "cuttana-restream", "repro.core.restream:partition_restream",

@@ -186,4 +186,10 @@ def _check_param_types(info: PartitionerInfo, block: Any):
                 f"{info.name!r} param {field.name!r} must be {ann}, "
                 f"got {type(value).__name__} {value!r}"
             )
+        if field.name == "num_shards" and value < 1:
+            # the sharded engines need at least one shard cursor; fail at
+            # spec construction, not mid-stream
+            raise ValueError(
+                f"{info.name!r} param 'num_shards' must be >= 1, got {value!r}"
+            )
     return block

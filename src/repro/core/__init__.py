@@ -29,8 +29,11 @@ from repro.core.engine import (
     LDGScorer,
     PlacementPolicy,
     Scorer,
+    ShardedBufferedPolicy,
+    ShardedImmediatePolicy,
     StreamEngine,
 )
+from repro.core.parallel import fennel_parallel, partition_parallel
 from repro.core.hdrf import EdgePartition, partition_ginger, partition_hdrf
 from repro.core.random_hash import partition_chunked, partition_hash, partition_random
 
@@ -78,4 +81,8 @@ __all__ = [
     "PlacementPolicy",
     "ImmediatePolicy",
     "BufferedPolicy",
+    "ShardedImmediatePolicy",
+    "ShardedBufferedPolicy",
+    "partition_parallel",
+    "fennel_parallel",
 ]

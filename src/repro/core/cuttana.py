@@ -38,6 +38,37 @@ from repro.core.subpartition import SubPartitioner
 from repro.graph.csr import CSRGraph
 
 
+def _phase2_refine(
+    graph: CSRGraph,
+    subp: SubPartitioner,
+    k: int,
+    epsilon: float,
+    balance_mode: str,
+    thresh: float,
+    max_moves: int | None = None,
+):
+    """Merge + coarsen + refine (paper §III-B): build the sub-partition
+    graph from phase-1's sub-assignments and run greedy trades. Shared by
+    ``cuttana``, ``cuttana-batched``, ``cuttana-parallel`` (where it is the
+    pass that reconciles shard-boundary vertices), and :func:`refine_any`.
+
+    Returns ``(part, sub_part, moves, cut_improvement)``.
+    """
+    w = build_subpartition_graph(graph, subp.sub_of, subp.kp)
+    sub_part = np.repeat(np.arange(k, dtype=np.int64), subp.s)
+    if balance_mode == "edge":
+        size = subp.sub_e_counts.copy()
+        total = float(graph.indices.shape[0])
+    else:
+        size = subp.sub_v_counts.copy()
+        total = float(graph.num_vertices)
+    refiner = Refiner(w, sub_part, size, k, epsilon, total_mass=total)
+    stats = refiner.refine(thresh=thresh, max_moves=max_moves)
+    sub_part = refiner.sub_part.copy()
+    part = sub_part[subp.sub_of].astype(np.int32)
+    return part, sub_part, stats.moves, stats.cut_improvement
+
+
 @dataclasses.dataclass
 class CuttanaResult:
     """Compat container for ``return_detail=True`` callers.
@@ -132,18 +163,9 @@ def partition(
     t1 = time.perf_counter()
     moves, improvement = 0, 0.0
     if use_refinement and k > 1:
-        w = build_subpartition_graph(graph, sub_of, kp)
-        if balance_mode == "edge":
-            size = subp.sub_e_counts.copy()
-            total = float(graph.indices.shape[0])
-        else:
-            size = subp.sub_v_counts.copy()
-            total = float(n)
-        refiner = Refiner(w, sub_part, size, k, epsilon, total_mass=total)
-        stats = refiner.refine(thresh=thresh, max_moves=max_moves)
-        moves, improvement = stats.moves, stats.cut_improvement
-        sub_part = refiner.sub_part.copy()
-        part = sub_part[sub_of].astype(np.int32)
+        part, sub_part, moves, improvement = _phase2_refine(
+            graph, subp, k, epsilon, balance_mode, thresh, max_moves
+        )
     phase2_s = time.perf_counter() - t1
 
     if telemetry is not None:
@@ -193,13 +215,5 @@ def refine_any(
     for v in range(n):
         nbrs = indices[indptr[v] : indptr[v + 1]]
         subp.assign(v, int(part[v]), nbrs, nbrs.size)
-    kp = subp.kp
-    sub_part = np.repeat(np.arange(k, dtype=np.int64), subp.s)
-    w = build_subpartition_graph(graph, subp.sub_of, kp)
-    if balance_mode == "edge":
-        size, total = subp.sub_e_counts, float(graph.indices.shape[0])
-    else:
-        size, total = subp.sub_v_counts, float(n)
-    refiner = Refiner(w, sub_part, size, k, epsilon, total_mass=total)
-    refiner.refine(thresh=thresh)
-    return refiner.sub_part[subp.sub_of].astype(np.int32)
+    refined, _, _, _ = _phase2_refine(graph, subp, k, epsilon, balance_mode, thresh)
+    return refined

@@ -26,8 +26,8 @@ import time
 import numpy as np
 
 from repro.core.base import FennelParams, PartitionState, finalize
+from repro.core.cuttana import _phase2_refine
 from repro.core.engine import EngineConfig, FennelScorer, ImmediatePolicy, StreamEngine
-from repro.core.refinement import Refiner, build_subpartition_graph
 from repro.core.subpartition import SubPartitioner
 from repro.graph.csr import CSRGraph
 
@@ -81,16 +81,9 @@ def partition_batched(
     moves, improvement = 0, 0.0
     t1 = time.perf_counter()
     if use_refinement and k > 1:
-        w = build_subpartition_graph(graph, subp.sub_of, subp.kp)
-        sub_part = np.repeat(np.arange(k, dtype=np.int64), subp.s)
-        if balance_mode == "edge":
-            size, total = subp.sub_e_counts, float(graph.indices.shape[0])
-        else:
-            size, total = subp.sub_v_counts, float(n)
-        r = Refiner(w, sub_part, size, k, epsilon, total_mass=total)
-        stats = r.refine(thresh=thresh)
-        moves, improvement = stats.moves, stats.cut_improvement
-        part = r.sub_part[subp.sub_of].astype(np.int32)
+        part, _, moves, improvement = _phase2_refine(
+            graph, subp, k, epsilon, balance_mode, thresh
+        )
     if telemetry is not None:
         telemetry.update(engine.telemetry)
         telemetry.update(

@@ -25,7 +25,17 @@ hot path:
   :class:`ImmediatePolicy` (FENNEL / LDG / HeiStream batches / restream
   reassignment) or :class:`BufferedPolicy` - CUTTANA Algorithm 1 with the
   D_max bypass and the complete-eviction cascade, backed by the array-based
-  :class:`~repro.core.buffer.PriorityBuffer`.
+  :class:`~repro.core.buffer.PriorityBuffer`;
+* the *sharded* policies (:class:`ShardedImmediatePolicy`,
+  :class:`ShardedBufferedPolicy`) run S interleaved shard frontiers per
+  bulk-synchronous superstep - one packed
+  :func:`~repro.kernels.partition_score.fennel_scores_sharded` kernel call
+  scores every shard's candidates, shard-local buffers/load views keep the
+  supersteps independent, and the shared :class:`PartitionState` is
+  exchanged only at superstep boundaries (the paper's parallel CUTTANA,
+  relaxed consistency surfaced as ``boundary_conflicts`` telemetry).
+  ``num_shards=1`` delegates to the sequential policies, so it stays
+  bit-identical to the classic engine.
 
 Extension points: implement ``Scorer`` for a new scoring rule (e.g. a
 weighted-affinity variant) or ``PlacementPolicy`` for a new placement
@@ -43,9 +53,10 @@ from repro.core.base import FennelParams, PartitionState
 from repro.core.buffer import PriorityBuffer
 from repro.core.subpartition import SubPartitioner
 from repro.graph.csr import CSRGraph
-from repro.graph.stream import stream_order
+from repro.graph.stream import ShardedStream, stream_order
 from repro.kernels.partition_score.ops import (
     fennel_scores,
+    fennel_scores_sharded,
     kernel_active,
     neighbor_histograms_host,
 )
@@ -62,6 +73,8 @@ __all__ = [
     "PlacementPolicy",
     "ImmediatePolicy",
     "BufferedPolicy",
+    "ShardedImmediatePolicy",
+    "ShardedBufferedPolicy",
     "EngineConfig",
     "StreamEngine",
 ]
@@ -480,6 +493,405 @@ class BufferedPolicy:
         )
 
 
+# ------------------------------------------------------------------ helpers
+def _expand_csr_batch(indptr, indices, batch, degs):
+    """Flat neighbour expansion of a candidate batch: returns
+    ``(rows, idx_in_row, cols)`` where flat position ``j`` is the
+    ``idx_in_row[j]``-th neighbour (vertex id ``cols[j]``) of
+    ``batch[rows[j]]``. Shared by the sequential chunk path, the superstep
+    core, and the sharded buffer's admission scan."""
+    rows = np.repeat(np.arange(batch.shape[0], dtype=np.int64), degs)
+    offs = np.zeros(batch.shape[0], dtype=np.int64)
+    np.cumsum(degs[:-1], out=offs[1:])
+    idx_in_row = np.arange(rows.shape[0], dtype=np.int64) - offs[rows]
+    cols = indices[np.repeat(indptr[batch], degs) + idx_in_row]
+    return rows, idx_in_row, cols
+
+
+# --------------------------------------------------------- sharded policies
+def _check_num_shards(num_shards) -> int:
+    s = int(num_shards)
+    if s < 1 or s != num_shards:
+        raise ValueError(f"num_shards must be a positive integer, got {num_shards!r}")
+    return s
+
+
+class _SuperstepRunner:
+    """Bulk-synchronous superstep core shared by the sharded policies.
+
+    Per superstep, every shard's candidate vertices are scored against the
+    *superstep-start snapshot* of the shared :class:`PartitionState` in ONE
+    packed :func:`fennel_scores_sharded` kernel call (leading shard batch
+    dimension), then each shard places its candidates against a local view
+    (snapshot + its own deltas, with the remaining per-partition capacity
+    split evenly across shards). Assignments and loads are exchanged only at
+    the superstep boundary - the paper's relaxed-consistency parallel design.
+    Same-shard same-superstep neighbours are corrected exactly (the stream
+    engine's in-chunk correction); cross-shard ones are not, and are counted
+    as ``boundary_conflicts`` for the merge + coarsen + refine pass to
+    reconcile.
+    """
+
+    def __init__(self, eng: "StreamEngine", sharded: ShardedStream):
+        if not hasattr(eng.scorer, "affine"):
+            raise ValueError(
+                "sharded policies require a scorer with the affine contract "
+                "(scores == hist * mul + add); got "
+                f"{type(eng.scorer).__name__}"
+            )
+        self.eng = eng
+        self.sharded = sharded
+        state = eng.state
+        self.k = state.k
+        self.shard_of = sharded.shard_of(eng.graph.num_vertices)
+        self.step_mark = np.full(eng.graph.num_vertices, -1, dtype=np.int64)
+        self.step = 0
+        self.sync_rounds = 0
+        self.boundary_conflicts = 0
+        self.vertex_mode = state.balance_mode == "vertex"
+        self.cap = (
+            state.vertex_capacity if self.vertex_mode else state.edge_capacity
+        )
+
+    # -------------------------------------------------------- histogramming
+    def _histograms(self, big, degs, rows, cols, idx_in_row, counts):
+        """float64[sum(counts), K] assigned-neighbour histograms vs the
+        snapshot, via one sharded kernel call (or its flat host companion)."""
+        eng = self.eng
+        k = self.k
+        total = big.shape[0]
+        eng.telemetry["kernel_calls"] += 1
+        part_of = eng.state.part_of
+        if not eng._use_kernel:
+            return neighbor_histograms_host(rows, part_of[cols], total, k)
+        indptr, indices = eng.graph.indptr, eng.graph.indices
+        num_shards = len(counts)
+        cmax = max(max(counts), 1)
+        max_deg = int(degs.max()) if total else 0
+        kw = max(min(max_deg, _EXACT_KERNEL_WIDTH), 1)
+        over = np.flatnonzero(degs > kw)
+        width = max(8, 1 << (kw - 1).bit_length())
+        bounds = np.cumsum(np.asarray(counts, dtype=np.int64))
+        starts = bounds - np.asarray(counts, dtype=np.int64)
+        row_shard = np.searchsorted(bounds, rows, side="right")
+        local_rows = rows - starts[row_shard]
+        nbr3 = np.full((num_shards, cmax, width), -1, dtype=np.int32)
+        if over.size:
+            fmask = (degs <= kw)[rows]
+            nbr3[row_shard[fmask], local_rows[fmask], idx_in_row[fmask]] = (
+                part_of[cols[fmask]]
+            )
+        else:
+            nbr3[row_shard, local_rows, idx_in_row] = part_of[cols]
+        out = np.asarray(
+            fennel_scores_sharded(
+                nbr3, np.zeros((num_shards, k), dtype=np.float32), 0.0, 1.5,
+                use_pallas=eng.config.use_pallas, interpret=eng.config.interpret,
+            ),
+            dtype=np.float64,
+        )
+        hist = np.empty((total, k), dtype=np.float64)
+        for s, c in enumerate(counts):
+            if c:
+                hist[starts[s] : bounds[s]] = out[s, :c]
+        for i in over.tolist():
+            v = int(big[i])
+            nbp = part_of[indices[indptr[v] : indptr[v + 1]]]
+            hist[i] = np.bincount(nbp[nbp >= 0], minlength=k)
+        return hist
+
+    # ----------------------------------------------------------- superstep
+    def run_superstep(self, batches: list[np.ndarray]) -> np.ndarray | None:
+        """Score + place all shards' candidates, commit at the boundary.
+
+        Returns the flat neighbour-id array of everything placed (the
+        buffered policy notifies every shard buffer with it), or None when
+        the superstep had no candidates.
+        """
+        eng = self.eng
+        state = eng.state
+        self.step += 1
+        counts = [int(b.shape[0]) for b in batches]
+        total = sum(counts)
+        if total == 0:
+            return None
+        graph = eng.graph
+        indptr, indices = graph.indptr, graph.indices
+        k = self.k
+        big = np.concatenate([np.asarray(b, dtype=np.int64) for b in batches])
+        degs = (indptr[big + 1] - indptr[big]).astype(np.int64)
+        rows, idx_in_row, cols = _expand_csr_batch(indptr, indices, big, degs)
+        hist = self._histograms(big, degs, rows, cols, idx_in_row, counts)
+
+        scorer = eng.scorer
+        subp = eng.subp
+        rng = state.rng
+        v_counts, e_counts = state.v_counts, state.e_counts
+        loads0 = v_counts if self.vertex_mode else e_counts
+        # remaining per-partition capacity split evenly across the shards
+        # that actually place this superstep (empty batches - e.g. drained
+        # cursors - must not starve the active ones): the merged superstep
+        # cannot overshoot the balance condition any worse than the
+        # sequential least-loaded fallback already can
+        active = sum(1 for c in counts if c)
+        room = np.maximum(self.cap - loads0, 0.0) / active
+        room_l = room.tolist()
+        mul_a, add_a = scorer.affine(state)  # snapshot penalty (state untouched)
+        nbr_views = (
+            [indices[indptr[v] : indptr[v + 1]] for v in big.tolist()]
+            if subp is not None
+            else None
+        )
+        assigned_flat = np.empty(total, dtype=np.int64)
+        neg_inf = float("-inf")
+        krange = range(k)
+        vertex_mode = self.vertex_mode
+        sc = [neg_inf] * k
+        # nnz slice per shard (rows is sorted ascending)
+        bounds = np.cumsum(np.asarray(counts, dtype=np.int64))
+        nnz_edges = np.searchsorted(rows, np.concatenate(([0], bounds)))
+        row_lo = 0
+        for s, batch in enumerate(batches):
+            c = counts[s]
+            if c == 0:
+                continue
+            a, b_ = nnz_edges[s], nnz_edges[s + 1]
+            corr = eng._inchunk_corr(
+                np.asarray(batch, dtype=np.int64), rows[a:b_] - row_lo, cols[a:b_]
+            )
+            H = hist[row_lo : row_lo + c].tolist()
+            bl = np.asarray(batch).tolist()
+            dl = degs[row_lo : row_lo + c].tolist()
+            # shard-local view: snapshot loads + own deltas, snapshot penalty
+            mul = None if mul_a is None else mul_a.tolist()
+            add = add_a.tolist()
+            v_list = v_counts.tolist()
+            e_list = e_counts.tolist()
+            load = v_list if vertex_mode else e_list
+            used = [0.0] * k
+            out = assigned_flat[row_lo : row_lo + c]
+            for i in range(c):
+                v, deg = bl[i], dl[i]
+                row = H[i]
+                inc = 1 if vertex_mode else deg
+                best = neg_inf
+                if mul is None:
+                    for p in krange:
+                        if used[p] + inc > room_l[p]:
+                            sc[p] = neg_inf
+                            continue
+                        s_ = row[p] + add[p]
+                        sc[p] = s_
+                        if s_ > best:
+                            best = s_
+                else:
+                    for p in krange:
+                        if used[p] + inc > room_l[p]:
+                            sc[p] = neg_inf
+                            continue
+                        s_ = row[p] * mul[p] + add[p]
+                        sc[p] = s_
+                        if s_ > best:
+                            best = s_
+                if best == neg_inf:
+                    # shard headroom exhausted everywhere - least loaded by
+                    # the local view, same rule as the sequential fallback
+                    p = load.index(min(load))
+                else:
+                    thr = best - 1e-12
+                    ties = [p for p in krange if sc[p] >= thr]
+                    p = ties[0] if len(ties) == 1 else int(ties[rng.integers(len(ties))])
+                out[i] = p
+                v_list[p] += 1
+                e_list[p] += deg
+                used[p] += inc
+                u = scorer.affine_update(v_list[p], e_list[p])
+                if mul is not None:
+                    mul[p] = u[0]
+                add[p] = u[1]
+                if subp is not None:
+                    subp.assign(v, p, nbr_views[row_lo + i], deg)
+                if corr is not None:
+                    dst, starts = corr
+                    for j in dst[starts[i] : starts[i + 1]]:
+                        H[j][p] += 1.0
+            row_lo += c
+        # ---------------------------------------------- boundary exchange
+        state.part_of[big] = assigned_flat
+        v_counts += np.bincount(assigned_flat, minlength=k).astype(np.float64)
+        e_counts += np.bincount(
+            assigned_flat, weights=degs.astype(np.float64), minlength=k
+        )
+        self.sync_rounds += 1
+        self.step_mark[big] = self.step
+        if cols.size:
+            same_step = self.step_mark[cols] == self.step
+            cross = same_step & (self.shard_of[cols] != self.shard_of[big[rows]])
+            # each conflicting edge appears once from either endpoint
+            self.boundary_conflicts += int(cross.sum()) // 2
+        return cols
+
+    def finalize_telemetry(self) -> None:
+        self.eng.telemetry.update(
+            supersteps=self.step,
+            sync_rounds=self.sync_rounds,
+            boundary_conflicts=self.boundary_conflicts,
+            num_shards=self.sharded.num_shards,
+        )
+
+
+class ShardedImmediatePolicy:
+    """S interleaved shard frontiers placed per bulk-synchronous superstep.
+
+    The FENNEL/LDG analogue of the paper's parallel CUTTANA: every superstep
+    each shard advances its cursor by ``config.chunk`` vertices, all shards'
+    chunks are scored in one packed kernel call, and the shared state is
+    synchronized at the boundary. ``num_shards=1`` is *defined* as the
+    sequential engine (delegates to :class:`ImmediatePolicy`), so every
+    sequential parity guarantee carries over bit-for-bit.
+    """
+
+    def __init__(self, num_shards: int):
+        self.num_shards = _check_num_shards(num_shards)
+
+    def run(self, eng: "StreamEngine") -> None:
+        if self.num_shards == 1:
+            ImmediatePolicy().run(eng)
+            eng.telemetry.update(
+                supersteps=0, sync_rounds=0, boundary_conflicts=0, num_shards=1
+            )
+            return
+        sharded = ShardedStream.from_ids(eng.ids, self.num_shards)
+        runner = _SuperstepRunner(eng, sharded)
+        for batches in sharded.superstep_batches(eng.config.chunk):
+            runner.run_superstep(batches)
+        runner.finalize_telemetry()
+
+
+class ShardedBufferedPolicy:
+    """Parallel CUTTANA Algorithm 1: shard-local priority buffers around the
+    bulk-synchronous superstep core.
+
+    Each shard ingests ``config.chunk`` stream vertices per superstep into
+    its own :class:`PriorityBuffer` (D_max bypasses and already-complete
+    vertices become immediate candidates; overflow evicts the best-scored
+    ones), all shards' candidates are placed through ONE packed kernel call,
+    and at the boundary every shard's buffer is notified with the whole
+    superstep's placements - cross-shard visibility arrives exactly one
+    superstep late (relaxed consistency). Complete vertices surfacing at a
+    boundary are placed in the next superstep; buffers drain chunk-at-a-time
+    once their cursor is exhausted. ``num_shards=1`` delegates to the
+    sequential :class:`BufferedPolicy` (bit-identical by construction).
+    """
+
+    def __init__(self, num_shards: int, max_qsize: int, d_max: int, theta: float = 1.0):
+        self.num_shards = _check_num_shards(num_shards)
+        self.max_qsize = int(max_qsize)
+        self.d_max = max(int(d_max), 1)
+        self.theta = float(theta)
+        self.buffers: list[PriorityBuffer] | None = None
+
+    def run(self, eng: "StreamEngine") -> None:
+        if self.num_shards == 1:
+            seq = BufferedPolicy(self.max_qsize, self.d_max, self.theta)
+            seq.run(eng)
+            self.buffers = [seq.buffer]
+            eng.telemetry.update(
+                supersteps=0, sync_rounds=0, boundary_conflicts=0, num_shards=1
+            )
+            return
+        num_shards = self.num_shards
+        graph = eng.graph
+        indptr, indices = graph.indptr, graph.indices
+        part_of = eng.state.part_of
+        sharded = ShardedStream.from_ids(eng.ids, num_shards)
+        runner = _SuperstepRunner(eng, sharded)
+        chunk = max(int(eng.config.chunk), 1)
+        bufs = [
+            PriorityBuffer(self.max_qsize, self.d_max, self.theta, graph=graph)
+            for _ in range(num_shards)
+        ]
+        self.buffers = bufs
+        pending: list[list[int]] = [[] for _ in range(num_shards)]
+        cursors = [0] * num_shards
+        d_max = self.d_max
+        evictions = drained = bypass = peak = 0
+        while True:
+            batches: list[np.ndarray] = []
+            for s in range(num_shards):
+                cand = pending[s]
+                pending[s] = []
+                shard = sharded.shards[s]
+                buf = bufs[s]
+                take = shard[cursors[s] : cursors[s] + chunk]
+                cursors[s] += take.shape[0]
+                if take.shape[0]:
+                    tdegs = (indptr[take + 1] - indptr[take]).astype(np.int64)
+                    trows, _, tcols = _expand_csr_batch(
+                        indptr, indices, take, tdegs
+                    )
+                    asg = np.bincount(
+                        trows[part_of[tcols] != -1], minlength=take.shape[0]
+                    )
+                    byp = tdegs >= d_max
+                    comp = (~byp) & (asg == tdegs) & (tdegs > 0)
+                    tl = take.tolist()
+                    al = asg.tolist()
+                    bypl = byp.tolist()
+                    compl = comp.tolist()
+                    for i in range(len(tl)):
+                        if bypl[i]:
+                            bypass += 1
+                            cand.append(tl[i])
+                        elif compl[i]:
+                            cand.append(tl[i])
+                        else:
+                            buf.push(tl[i], None, al[i])
+                    if len(buf) > peak:
+                        peak = len(buf)
+                    while buf.full:
+                        u, _ = buf.pop_best()
+                        evictions += 1
+                        cand.append(u)
+                elif len(buf):
+                    # cursor exhausted: drain the buffer in score order,
+                    # chunk candidates per superstep
+                    for _ in range(max(chunk - len(cand), 0)):
+                        if not len(buf):
+                            break
+                        u, _ = buf.pop_best()
+                        drained += 1
+                        cand.append(u)
+                batches.append(np.asarray(cand, dtype=np.int64))
+            if all(b.shape[0] == 0 for b in batches):
+                exhausted = all(
+                    cursors[s] >= sharded.shards[s].shape[0]
+                    for s in range(num_shards)
+                )
+                if exhausted and not any(len(b) for b in bufs):
+                    break
+                # everything ingested got buffered - still a superstep, no sync
+                runner.step += 1
+                continue
+            cols = runner.run_superstep(batches)
+            if cols is not None and cols.size:
+                # boundary: every shard buffer learns about ALL placements
+                for s in range(num_shards):
+                    buf = bufs[s]
+                    if not len(buf):
+                        continue
+                    for w in buf.notify_many(cols):
+                        buf.remove(w)
+                        pending[s].append(w)
+        eng.telemetry.update(
+            buffer_evictions=evictions,
+            buffer_drained=drained,
+            buffer_peak=peak,
+            degree_bypass=bypass,
+        )
+        runner.finalize_telemetry()
+
+
 # ------------------------------------------------------------------- engine
 class StreamEngine:
     """Drives one streaming pass: ``scorer.begin`` then ``policy.run``.
@@ -570,11 +982,7 @@ class StreamEngine:
         if not cfg.exact:
             w = min(w, cfg.sample_cap)
         indptr, indices = self.graph.indptr, self.graph.indices
-        rows = np.repeat(np.arange(c, dtype=np.int64), degs)
-        offs = np.zeros(c, dtype=np.int64)
-        np.cumsum(degs[:-1], out=offs[1:])
-        idx_in_row = np.arange(rows.shape[0], dtype=np.int64) - offs[rows]
-        cols = indices[np.repeat(indptr[batch], degs) + idx_in_row]
+        rows, idx_in_row, cols = _expand_csr_batch(indptr, indices, batch, degs)
         part_of = state.part_of
         scale = None
         sampled: list[tuple[int, np.ndarray]] = []
@@ -636,17 +1044,26 @@ class StreamEngine:
                 hist = neighbor_histograms_host(rows, part_of[cols], c, state.k)
         if scale is not None:
             hist *= scale[:, None]
-        corr = None
-        if cfg.exact:
-            pos = self._pos
-            pos[batch] = np.arange(c, dtype=np.int64)
-            cpos = pos[cols]
-            emask = (cpos >= 0) & (cpos < rows)
-            pos[batch] = -1
-            src = cpos[emask]
-            dst = rows[emask]
-            o = np.argsort(src, kind="stable")
-            src, dst = src[o], dst[o]
-            starts = np.searchsorted(src, np.arange(c + 1)).tolist()
-            corr = (dst.tolist(), starts)
+        corr = self._inchunk_corr(batch, rows, cols) if cfg.exact else None
         return hist, corr
+
+    def _inchunk_corr(self, batch: np.ndarray, rows: np.ndarray, cols: np.ndarray):
+        """``(dst, starts)`` in-chunk correction lists for a candidate batch:
+        for position ``i``, ``dst[starts[i]:starts[i+1]]`` are the later
+        positions whose histograms must bump when ``batch[i]`` is assigned.
+        ``rows``/``cols`` are the batch's flat (position, neighbour-id) pairs;
+        shared by the sequential exact path and the per-shard superstep loop
+        (where cross-shard pairs are deliberately absent - that staleness is
+        the relaxed-consistency trade, surfaced as ``boundary_conflicts``)."""
+        c = batch.shape[0]
+        pos = self._pos
+        pos[batch] = np.arange(c, dtype=np.int64)
+        cpos = pos[cols]
+        emask = (cpos >= 0) & (cpos < rows)
+        pos[batch] = -1
+        src = cpos[emask]
+        dst = rows[emask]
+        o = np.argsort(src, kind="stable")
+        src, dst = src[o], dst[o]
+        starts = np.searchsorted(src, np.arange(c + 1)).tolist()
+        return (dst.tolist(), starts)

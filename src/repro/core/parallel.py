@@ -1,0 +1,168 @@
+"""Parallel CUTTANA: shard-parallel buffered streaming (paper §V).
+
+The paper's headline systems claim is "a parallel version for CUTTANA that
+offers nearly the same partitioning latency as existing streaming
+partitioners". This module wires the sharded bulk-synchronous policies of
+:mod:`repro.core.engine` into full partitioners:
+
+* :func:`partition_parallel` (``cuttana-parallel``) - S shard-local priority
+  buffers around one shared :class:`~repro.core.base.PartitionState`; every
+  superstep scores all shards' candidates in ONE packed
+  :func:`~repro.kernels.partition_score.fennel_scores_sharded` kernel call,
+  exchanges assignments/loads at the boundary, and the usual merge ->
+  coarsen -> refine phase 2 reconciles shard-boundary vertices afterwards.
+* :func:`fennel_parallel` (``fennel-parallel``) - the same superstep core
+  with immediate placement, i.e. a bulk-synchronous parallel FENNEL.
+
+``num_shards=1`` is *defined* as the sequential engine (both wrappers build
+the exact objects :mod:`repro.core.cuttana` / :mod:`repro.core.fennel`
+build), so assignments are bit-identical to ``cuttana`` / ``fennel`` and all
+sequential parity guarantees carry over; ``tests/test_parallel.py`` pins
+this for every stream order. For S >= 2 the relaxed consistency (histograms
+one superstep stale across shards) trades a bounded quality delta for the
+batched streaming latency - measured by the ``scaling`` benchmark suite.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.base import FennelParams, PartitionState, finalize
+from repro.core.cuttana import _phase2_refine
+from repro.core.engine import (
+    EngineConfig,
+    FennelScorer,
+    ShardedBufferedPolicy,
+    ShardedImmediatePolicy,
+    StreamEngine,
+)
+from repro.core.subpartition import SubPartitioner
+from repro.graph.csr import CSRGraph
+
+__all__ = ["partition_parallel", "fennel_parallel"]
+
+
+def partition_parallel(
+    graph: CSRGraph,
+    k: int,
+    epsilon: float = 0.05,
+    balance_mode: str = "edge",
+    num_shards: int = 4,
+    d_max: int = 1000,
+    max_qsize: int | None = None,
+    theta: float = 1.0,
+    subparts_per_partition: int | None = None,
+    use_refinement: bool = True,
+    thresh: float = 0.0,
+    max_moves: int | None = None,
+    fennel_params: FennelParams | None = None,
+    order: str = "natural",
+    seed: int = 0,
+    chunk: int = 512,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+    telemetry: dict | None = None,
+) -> np.ndarray:
+    """Shard-parallel CUTTANA: Algorithm 1 over ``num_shards`` interleaved
+    shard cursors with bulk-synchronous supersteps, then phase-2 refinement.
+
+    ``num_shards=1`` is bit-identical to :func:`repro.core.cuttana.partition`
+    under the same knobs. ``telemetry`` additionally receives the parallel
+    counters: ``supersteps``, ``sync_rounds``, ``boundary_conflicts``,
+    ``num_shards``.
+    """
+    if int(num_shards) < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards!r}")
+    n = graph.num_vertices
+    if max_qsize is None:
+        max_qsize = max(1024, n // 10)
+    if subparts_per_partition is None:
+        subparts_per_partition = int(max(8, min(4096, n // (8 * k))))
+
+    params = fennel_params or FennelParams(hybrid=(balance_mode == "edge"))
+    state = PartitionState.create(graph, k, epsilon, balance_mode, seed)
+    subp = SubPartitioner(
+        graph,
+        k,
+        subparts_per_partition,
+        epsilon=max(epsilon, 0.10),
+        balance_mode=balance_mode,
+        seed=seed,
+    )
+    t0 = time.perf_counter()
+    engine = StreamEngine(
+        graph,
+        state,
+        FennelScorer(graph, k, params, balance_mode),
+        ShardedBufferedPolicy(num_shards, max_qsize, d_max, theta),
+        subpartitioner=subp,
+        order=order,
+        seed=seed,
+        config=EngineConfig(chunk=chunk, use_pallas=use_pallas, interpret=interpret),
+    )
+    engine.run()
+    phase1_s = time.perf_counter() - t0
+
+    part = finalize(state)
+    kp = subp.kp
+
+    t1 = time.perf_counter()
+    moves, improvement = 0, 0.0
+    if use_refinement and k > 1:
+        # merge + coarsen + refine: the trade pass that reconciles the
+        # shard-boundary vertices the relaxed supersteps mis-scored
+        part, _, moves, improvement = _phase2_refine(
+            graph, subp, k, epsilon, balance_mode, thresh, max_moves
+        )
+    phase2_s = time.perf_counter() - t1
+
+    if telemetry is not None:
+        telemetry.update(engine.telemetry)
+        telemetry.update(
+            phase1_seconds=phase1_s,
+            phase2_seconds=phase2_s,
+            refine_moves=moves,
+            refine_improvement=improvement,
+            subpartitions=int(kp),
+        )
+    return part
+
+
+def fennel_parallel(
+    graph: CSRGraph,
+    k: int,
+    epsilon: float = 0.05,
+    balance_mode: str = "vertex",
+    num_shards: int = 4,
+    params: FennelParams | None = None,
+    order: str = "natural",
+    seed: int = 0,
+    chunk: int = 512,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+    telemetry: dict | None = None,
+) -> np.ndarray:
+    """Bulk-synchronous parallel FENNEL over ``num_shards`` shard cursors.
+
+    ``num_shards=1`` is bit-identical to :func:`repro.core.fennel.partition`.
+    """
+    if int(num_shards) < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards!r}")
+    params = params or FennelParams()
+    state = PartitionState.create(graph, k, epsilon, balance_mode, seed)
+    t0 = time.perf_counter()
+    engine = StreamEngine(
+        graph,
+        state,
+        FennelScorer(graph, k, params, balance_mode),
+        ShardedImmediatePolicy(num_shards),
+        order=order,
+        seed=seed,
+        config=EngineConfig(chunk=chunk, use_pallas=use_pallas, interpret=interpret),
+    )
+    engine.run()
+    if telemetry is not None:
+        telemetry.update(engine.telemetry)
+        telemetry["stream_seconds"] = time.perf_counter() - t0
+    return finalize(state)

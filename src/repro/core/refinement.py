@@ -87,7 +87,10 @@ class Refiner:
         self._free: list[list[int]] = [list(range(self.cap2 - 1, -1, -1)) for _ in range(k)]
         for i in range(self.kp):
             self._alloc_slot(i, int(self.sub_part[i]))
-            self._write_entries(i)
+        for q in range(k):
+            members = np.flatnonzero(self.sub_part == q)
+            if members.size:
+                self._write_entries_group(members, q)
 
     # ------------------------------------------------------------- slot mgmt
     def _alloc_slot(self, i: int, p: int) -> None:
@@ -99,33 +102,62 @@ class Refiner:
         slot = int(self.slot_of[i])
         self.owner[p, slot] = -1
         self._free[p].append(slot)
-        # clear entries for this slot in every (p, dst) tree
-        for dst in range(self.k):
-            if dst != p:
-                self._update(p, dst, slot, NEG_INF)
+        # clear this slot's leaf across every (p, dst) tree, one repair pass
+        self.tree[p, :, self.cap2 + slot] = NEG_INF
+        self._repair_levels(p, slice(None), self.slot_of[i : i + 1])
 
     # ------------------------------------------------------------- tree ops
-    def _update(self, src: int, dst: int, slot: int, val: float) -> None:
-        t = self.tree[src, dst]
-        node = self.cap2 + slot
-        t[node] = val
-        node >>= 1
-        while node >= 1:
-            new = max(t[2 * node], t[2 * node + 1])
-            if t[node] == new:
-                break
-            t[node] = new
-            node >>= 1
+    def _repair_levels(self, src: int, dst_idx, slots: np.ndarray) -> None:
+        """Recompute the internal max nodes above ``slots`` in the
+        ``(src, dst)`` trees selected by ``dst_idx`` (a slice for "all
+        destinations" or an index array) - ONE level-by-level pass repairs
+        any number of dirty leaves, each level a single K-wide ``maximum``
+        instead of the per-(dst, slot) scalar climbs this replaced."""
+        t = self.tree[src]
+        nodes = np.unique((np.asarray(slots, dtype=np.int64) + self.cap2) >> 1)
+        while True:
+            if isinstance(dst_idx, slice):
+                t[dst_idx, nodes] = np.maximum(
+                    t[dst_idx, 2 * nodes], t[dst_idx, 2 * nodes + 1]
+                )
+            else:
+                t[np.ix_(dst_idx, nodes)] = np.maximum(
+                    t[np.ix_(dst_idx, 2 * nodes)], t[np.ix_(dst_idx, 2 * nodes + 1)]
+                )
+            if nodes[0] == 1:  # perfect tree: every leaf reaches the root together
+                return
+            nodes = np.unique(nodes >> 1)
 
     def _write_entries(self, i: int) -> None:
         """(Re)write DEC entries of sub-partition ``i`` for all destinations."""
         p = int(self.sub_part[i])
         slot = int(self.slot_of[i])
-        mi = self.m[i]
-        base = mi[p]
-        for dst in range(self.k):
-            if dst != p:
-                self._update(p, dst, slot, mi[dst] - base)
+        col = self.m[i] - self.m[i, p]
+        col[p] = NEG_INF  # own partition is never a trade destination
+        self.tree[p, :, self.cap2 + slot] = col
+        self._repair_levels(p, slice(None), self.slot_of[i : i + 1])
+
+    def _write_entries_group(self, members: np.ndarray, q: int) -> None:
+        """Batched :meth:`_write_entries` for sub-partitions all living in
+        ``q``: one [K, n] leaf write + one repair pass (the Theorem 2 path
+        for neighbours in the move's src/dst partitions, whose DEC base
+        changed for every destination)."""
+        slots = self.slot_of[members]
+        vals = self.m[members] - self.m[members, q][:, None]  # [n, K]
+        vals[:, q] = NEG_INF
+        self.tree[q][:, self.cap2 + slots] = vals.T
+        self._repair_levels(q, slice(None), slots)
+
+    def _write_pair_group(self, members: np.ndarray, q: int, src: int, dst: int) -> None:
+        """Batched Theorem 2 update for neighbours whose home partition ``q``
+        is uninvolved in the move: only their (q, src) and (q, dst) entries
+        changed, so two leaf-row writes + one two-row repair pass."""
+        slots = self.slot_of[members]
+        base = self.m[members, q]
+        t = self.tree[q]
+        t[src, self.cap2 + slots] = self.m[members, src] - base
+        t[dst, self.cap2 + slots] = self.m[members, dst] - base
+        self._repair_levels(q, np.asarray([src, dst]), slots)
 
     def _best_feasible(self, src: int, dst: int, floor: float) -> tuple[int, float] | None:
         """Best DEC > floor among feasible moves src->dst (pruned descent)."""
@@ -186,21 +218,16 @@ class Refiner:
         self.part_load[dst] += self.size[i]
         self._alloc_slot(i, dst)
         self._write_entries(i)
-        # --- Theorem 2 updates for neighbours
-        for j in nbrs:
-            q = int(self.sub_part[j])
-            slot = int(self.slot_of[j])
-            mj = self.m[j]
-            base = mj[q]
-            if q == src or q == dst:
-                for d in range(self.k):
-                    if d != q:
-                        self._update(q, d, slot, mj[d] - base)
-            else:
-                if src != q:
-                    self._update(q, src, slot, mj[src] - base)
-                if dst != q:
-                    self._update(q, dst, slot, mj[dst] - base)
+        # --- Theorem 2 updates for neighbours, batched per home partition
+        if nbrs.size:
+            qs = self.sub_part[nbrs]
+            for q in np.unique(qs).tolist():
+                members = nbrs[qs == q]
+                if q == src or q == dst:
+                    # base m[j, q] changed: every destination entry is dirty
+                    self._write_entries_group(members, int(q))
+                else:
+                    self._write_pair_group(members, int(q), src, dst)
         return dec
 
     def refine(

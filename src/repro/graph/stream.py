@@ -4,9 +4,16 @@ A stream yields ``(vertex_id, neighbor_array)`` exactly once per vertex; the
 partitioner may not look ahead. Supports the orderings the streaming
 literature studies (natural / random / BFS / DFS) since CUTTANA's headline
 property is robustness to input order.
+
+:class:`ShardedStream` splits any such order into ``S`` interleaved shard
+cursors for the parallel engine (paper §V: "a parallel version for CUTTANA"):
+shard ``s`` sees every ``S``-th vertex of the base order, so each shard's
+substream preserves the statistical character of the full stream (a BFS order
+stays neighbourhood-coherent per shard, a random order stays random).
 """
 from __future__ import annotations
 
+import dataclasses
 from collections import deque
 from typing import Iterator
 
@@ -56,3 +63,59 @@ def vertex_stream(
 ) -> Iterator[tuple[int, np.ndarray]]:
     for v in stream_order(graph, order, seed):
         yield int(v), graph.neighbors(int(v))
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedStream:
+    """``S`` interleaved shard cursors over one base stream order.
+
+    ``shards[s] == ids[s::S]`` - a round-robin split, so every vertex appears
+    in exactly one shard and shard lengths differ by at most one. The
+    parallel engine advances all cursors in lock step (one *superstep* per
+    round) and exchanges assignments only at superstep boundaries.
+    """
+
+    num_shards: int
+    shards: tuple[np.ndarray, ...]
+
+    @classmethod
+    def from_ids(cls, ids: np.ndarray, num_shards: int) -> "ShardedStream":
+        s = int(num_shards)
+        if s < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        return cls(s, tuple(ids[i::s] for i in range(s)))
+
+    @classmethod
+    def from_order(
+        cls,
+        graph: CSRGraph,
+        num_shards: int,
+        order: str = "natural",
+        seed: int = 0,
+    ) -> "ShardedStream":
+        return cls.from_ids(stream_order(graph, order, seed), num_shards)
+
+    @property
+    def num_vertices(self) -> int:
+        return sum(shard.shape[0] for shard in self.shards)
+
+    def shard_of(self, num_vertices: int) -> np.ndarray:
+        """int8/int16[num_vertices]: which shard streams each vertex (-1 if
+        the vertex is in no shard - only possible with an ``ids`` subset)."""
+        dtype = np.int8 if self.num_shards <= 127 else np.int32
+        out = np.full(num_vertices, -1, dtype=dtype)
+        for s, shard in enumerate(self.shards):
+            out[shard] = s
+        return out
+
+    def num_supersteps(self, chunk: int) -> int:
+        longest = max((shard.shape[0] for shard in self.shards), default=0)
+        return -(-longest // max(int(chunk), 1))
+
+    def superstep_batches(self, chunk: int) -> Iterator[list[np.ndarray]]:
+        """Yield one list of per-shard id batches per superstep; exhausted
+        shards contribute empty batches until the longest cursor finishes."""
+        chunk = max(int(chunk), 1)
+        for step in range(self.num_supersteps(chunk)):
+            lo = step * chunk
+            yield [shard[lo : lo + chunk] for shard in self.shards]

@@ -1,3 +1,3 @@
-from repro.kernels.partition_score.ops import fennel_scores
+from repro.kernels.partition_score.ops import fennel_scores, fennel_scores_sharded
 
-__all__ = ["fennel_scores"]
+__all__ = ["fennel_scores", "fennel_scores_sharded"]

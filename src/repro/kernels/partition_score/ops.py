@@ -5,8 +5,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.partition_score.partition_score import fennel_scores_pallas
-from repro.kernels.partition_score.ref import fennel_scores_ref
+from repro.kernels.partition_score.partition_score import (
+    fennel_scores_pallas,
+    fennel_scores_sharded_pallas,
+)
+from repro.kernels.partition_score.ref import (
+    fennel_scores_ref,
+    fennel_scores_sharded_ref,
+)
 
 
 def _on_tpu() -> bool:
@@ -69,3 +75,38 @@ def fennel_scores(
         block_b=block_b, d_chunk=d_chunk, interpret=interpret,
     )
     return out[:b]
+
+
+def fennel_scores_sharded(
+    nbr_parts,
+    sizes,
+    alpha: float,
+    gamma: float = 1.5,
+    use_pallas: bool | None = None,
+    interpret: bool = False,
+):
+    """scores[S, C, K] for S shard frontiers in one fused call.
+
+    ``nbr_parts`` int[S, C, D] (-1 padding, both on the neighbour axis and
+    for rows beyond a shard's candidate count), ``sizes`` float[S, K] - one
+    size row per shard, so a caller *can* fuse shard-local penalties into
+    the launch. The stream engine applies penalties incrementally on the
+    host (they change per placement) and calls this with ``alpha=0`` / zero
+    sizes - there the leading batch dimension packs all shards' padded
+    frontiers into one (shard, block) grid launch per superstep.
+    """
+    nbr_parts = jnp.asarray(nbr_parts, jnp.int32)
+    sizes = jnp.asarray(sizes, jnp.float32)
+    if not kernel_active(use_pallas, interpret):
+        return fennel_scores_sharded_ref(nbr_parts, sizes, alpha, gamma)
+    s, c, d = nbr_parts.shape
+    block_b = 128 if c >= 128 else 8
+    d_chunk = 128 if d >= 128 else max(8, d)
+    cp = int(np.ceil(max(c, 1) / block_b)) * block_b
+    dp = int(np.ceil(max(d, 1) / d_chunk)) * d_chunk
+    padded = jnp.full((s, cp, dp), -1, jnp.int32).at[:, :c, :d].set(nbr_parts)
+    out = fennel_scores_sharded_pallas(
+        padded, sizes, alpha, gamma,
+        block_b=block_b, d_chunk=d_chunk, interpret=interpret,
+    )
+    return out[:, :c]

@@ -41,6 +41,64 @@ def _score_kernel(nbr_ref, size_ref, out_ref, *, alpha, gamma, d_chunk):
     out_ref[...] = hist - penalty
 
 
+def _score_kernel_sharded(nbr_ref, size_ref, out_ref, *, alpha, gamma, d_chunk):
+    """One (shard, vertex-block) grid cell: identical math to ``_score_kernel``
+    but the size row is the *shard's* size view, so the fused penalty differs
+    per shard (the parallel engine's bulk-synchronous local state)."""
+    nbr = nbr_ref[0]  # [BB, D] int32 (leading shard dim is blocked to 1)
+    sizes = size_ref[0]  # [1, K] float32
+    bb, d = nbr.shape
+    k = sizes.shape[-1]
+    part_ids = jax.lax.broadcasted_iota(jnp.int32, (1, 1, k), 2)
+
+    def body(c, hist):
+        chunk = jax.lax.dynamic_slice(nbr, (0, c * d_chunk), (bb, d_chunk))
+        eq = (chunk[:, :, None] == part_ids).astype(jnp.float32)
+        return hist + eq.sum(axis=1)
+
+    steps = d // d_chunk
+    hist = jax.lax.fori_loop(0, steps, body, jnp.zeros((bb, k), jnp.float32))
+    penalty = alpha * gamma * jnp.power(jnp.maximum(sizes, 0.0), gamma - 1.0)
+    out_ref[0] = hist - penalty
+
+
+@functools.partial(
+    jax.jit, static_argnames=("alpha", "gamma", "block_b", "d_chunk", "interpret")
+)
+def fennel_scores_sharded_pallas(
+    nbr_parts: jnp.ndarray,  # int32[S, C, D] (-1 pad; C % block_b == 0, D % d_chunk == 0)
+    sizes: jnp.ndarray,  # float32[S, K]
+    alpha: float,
+    gamma: float,
+    block_b: int = 128,
+    d_chunk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """scores[S, C, K]: ONE kernel launch for all S shard frontiers.
+
+    The grid is (shard, vertex-block); every cell loads its shard's candidate
+    tile plus that shard's K-wide size row, so a whole superstep of the
+    parallel engine is a single fused call instead of S sequential ones.
+    """
+    s, c, d = nbr_parts.shape
+    k = sizes.shape[-1]
+    assert c % block_b == 0 and d % d_chunk == 0
+    kernel = functools.partial(
+        _score_kernel_sharded, alpha=alpha, gamma=gamma, d_chunk=d_chunk
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(s, c // block_b),
+        in_specs=[
+            pl.BlockSpec((1, block_b, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1, k), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_b, k), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, c, k), jnp.float32),
+        interpret=interpret,
+    )(nbr_parts, sizes[:, None, :])
+
+
 @functools.partial(
     jax.jit, static_argnames=("alpha", "gamma", "block_b", "d_chunk", "interpret")
 )

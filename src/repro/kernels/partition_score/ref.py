@@ -16,3 +16,22 @@ def fennel_scores_ref(
     hist = onehot.sum(axis=1).astype(jnp.float32)  # [B, K]
     penalty = alpha * gamma * jnp.power(jnp.maximum(sizes, 0.0), gamma - 1.0)
     return hist - penalty[None, :]
+
+
+def fennel_scores_sharded_ref(
+    nbr_parts: jnp.ndarray,  # int32[S, C, D] per-shard neighbour parts, -1 pad
+    sizes: jnp.ndarray,  # float32[S, K] per-shard partition sizes
+    alpha: float,
+    gamma: float,
+) -> jnp.ndarray:
+    """scores[S, C, K]: the sharded (leading-batch-dimension) oracle.
+
+    Shard ``s`` scores its candidates against *its own* size view - the
+    bulk-synchronous parallel engine gives every shard the superstep-start
+    snapshot plus its local deltas, so penalties differ per shard.
+    """
+    k = sizes.shape[-1]
+    onehot = nbr_parts[..., None] == jnp.arange(k, dtype=nbr_parts.dtype)
+    hist = onehot.sum(axis=2).astype(jnp.float32)  # [S, C, K]
+    penalty = alpha * gamma * jnp.power(jnp.maximum(sizes, 0.0), gamma - 1.0)
+    return hist - penalty[:, None, :]

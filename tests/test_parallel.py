@@ -1,0 +1,299 @@
+"""Shard-parallel engine tests: ShardedStream, num_shards=1 bit-parity with
+the sequential engine, bounded quality regression for S in {2, 4, 8},
+superstep telemetry, and the vectorized Refiner's invariants.
+
+The parity contract: ``num_shards=1`` is *defined* as the sequential engine,
+so ``cuttana-parallel``/``fennel-parallel`` at S=1 must return assignments
+bit-identical to ``cuttana``/``fennel`` for every stream order. For S >= 2
+the bulk-synchronous relaxation may change assignments, but edge-cut must
+stay within 10% of the sequential baseline on R-MAT (the paper's "nearly the
+same quality" claim, backed by the merge + coarsen + refine reconciliation).
+"""
+import numpy as np
+import pytest
+
+from repro.api import PartitionSpec, partition
+from repro.core.cuttana import partition as cuttana_partition
+from repro.core.fennel import partition as fennel_partition
+from repro.core.parallel import fennel_parallel, partition_parallel
+from repro.graph import edge_cut, rmat_graph
+from repro.graph.stream import ShardedStream, stream_order
+
+ORDERS = ("natural", "random", "bfs", "dfs")
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return rmat_graph(4000, avg_degree=10, seed=3)
+
+
+@pytest.fixture(scope="module")
+def small_graph():
+    return rmat_graph(1200, avg_degree=8, seed=4)
+
+
+# ------------------------------------------------------------ sharded stream
+def test_sharded_stream_partitions_the_order(graph):
+    for s in (1, 2, 3, 7):
+        sharded = ShardedStream.from_order(graph, s, order="random", seed=5)
+        assert sharded.num_shards == s
+        assert sharded.num_vertices == graph.num_vertices
+        all_ids = np.concatenate(sharded.shards)
+        assert np.array_equal(np.sort(all_ids), np.arange(graph.num_vertices))
+        # round-robin interleave of the base order
+        base = stream_order(graph, "random", 5)
+        for i, shard in enumerate(sharded.shards):
+            assert np.array_equal(shard, base[i::s])
+    one = ShardedStream.from_order(graph, 1, order="bfs", seed=0)
+    assert np.array_equal(one.shards[0], stream_order(graph, "bfs", 0))
+
+
+def test_sharded_stream_superstep_batches(graph):
+    sharded = ShardedStream.from_order(graph, 4, order="natural")
+    chunk = 128
+    steps = list(sharded.superstep_batches(chunk))
+    assert len(steps) == sharded.num_supersteps(chunk)
+    seen = []
+    for batches in steps:
+        assert len(batches) == 4
+        for shard_batch in batches:
+            assert shard_batch.shape[0] <= chunk
+            seen.append(shard_batch)
+    assert np.array_equal(
+        np.sort(np.concatenate(seen)), np.arange(graph.num_vertices)
+    )
+
+
+def test_sharded_stream_shard_of(graph):
+    sharded = ShardedStream.from_order(graph, 3, order="random", seed=1)
+    shard_of = sharded.shard_of(graph.num_vertices)
+    for s, shard in enumerate(sharded.shards):
+        assert (shard_of[shard] == s).all()
+    assert (shard_of >= 0).all()
+
+
+def test_sharded_stream_rejects_bad_shard_count():
+    with pytest.raises(ValueError, match="num_shards"):
+        ShardedStream.from_ids(np.arange(10), 0)
+
+
+# -------------------------------------------------------- num_shards=1 parity
+@pytest.mark.parametrize("order", ORDERS)
+def test_parallel_cuttana_single_shard_bit_identical(graph, small_graph, order):
+    kw = dict(d_max=32, max_qsize=256, theta=0.7, seed=1)
+    for g in (graph, small_graph):
+        want = cuttana_partition(g, 4, order=order, **kw)
+        got = partition_parallel(g, 4, num_shards=1, order=order, **kw)
+        np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("order", ORDERS)
+@pytest.mark.parametrize("balance_mode", ["vertex", "edge"])
+def test_parallel_fennel_single_shard_bit_identical(small_graph, order, balance_mode):
+    want = fennel_partition(
+        small_graph, 4, balance_mode=balance_mode, order=order, seed=7
+    )
+    got = fennel_parallel(
+        small_graph, 4, num_shards=1, balance_mode=balance_mode,
+        order=order, seed=7,
+    )
+    np.testing.assert_array_equal(got, want)
+
+
+def test_parallel_spec_single_shard_matches_sequential_spec(graph):
+    seq = partition(graph, PartitionSpec(algo="cuttana", k=4, order="random"))
+    par = partition(graph, PartitionSpec(
+        algo="cuttana-parallel", k=4, order="random",
+        params={"num_shards": 1},
+    ))
+    np.testing.assert_array_equal(par.assignment, seq.assignment)
+    assert par.telemetry["supersteps"] == 0
+    assert par.telemetry["num_shards"] == 1
+
+
+# --------------------------------------------------- S >= 2 quality regression
+@pytest.mark.parametrize("num_shards", [2, 4, 8])
+def test_parallel_cuttana_quality_within_10_percent(graph, num_shards):
+    seq = cuttana_partition(graph, 4, order="random", seed=1)
+    ec_seq = edge_cut(graph, seq)
+    par = partition_parallel(
+        graph, 4, num_shards=num_shards, order="random", seed=1, chunk=128,
+    )
+    ec_par = edge_cut(graph, par)
+    assert (par >= 0).all() and par.shape == seq.shape
+    assert ec_par <= 1.10 * ec_seq, (
+        f"S={num_shards}: parallel edge-cut {ec_par:.4f} vs "
+        f"sequential {ec_seq:.4f}"
+    )
+
+
+@pytest.mark.parametrize("num_shards", [2, 4])
+def test_parallel_fennel_quality_within_10_percent(graph, num_shards):
+    seq = fennel_partition(graph, 4, balance_mode="edge", order="random", seed=1)
+    ec_seq = edge_cut(graph, seq)
+    par = fennel_parallel(
+        graph, 4, num_shards=num_shards, balance_mode="edge",
+        order="random", seed=1, chunk=128,
+    )
+    assert edge_cut(graph, par) <= 1.10 * ec_seq
+
+
+def test_parallel_respects_balance_headroom(graph):
+    """Per-superstep capacity is split across shards, so merged loads stay
+    within the balance condition (up to the least-loaded fallback that the
+    sequential engine shares)."""
+    k, eps = 4, 0.05
+    par = fennel_parallel(
+        graph, k, epsilon=eps, num_shards=4, order="random", seed=0,
+    )
+    counts = np.bincount(par, minlength=k)
+    cap = (1.0 + eps) * graph.num_vertices / k
+    assert counts.max() <= cap + 1
+
+
+# ------------------------------------------------------- superstep telemetry
+@pytest.mark.parametrize("num_shards", [2, 4])
+def test_parallel_superstep_telemetry(graph, num_shards):
+    result = partition(graph, PartitionSpec(
+        algo="cuttana-parallel", k=4, order="random", seed=1,
+        params={"num_shards": num_shards, "chunk": 128},
+    ))
+    tel = result.telemetry
+    assert tel["num_shards"] == num_shards
+    assert tel["supersteps"] > 0
+    assert 0 < tel["sync_rounds"] <= tel["supersteps"]
+    assert tel["boundary_conflicts"] > 0  # cross-shard edges exist on R-MAT
+    assert tel["kernel_calls"] == tel["sync_rounds"]
+    # enough supersteps to cover the longest shard cursor
+    longest = -(-graph.num_vertices // num_shards)
+    assert tel["supersteps"] >= -(-longest // 128)
+    assert result.timings["phase1_seconds"] > 0
+
+
+def test_parallel_fennel_telemetry_counts_supersteps(graph):
+    tel = {}
+    fennel_parallel(graph, 4, num_shards=4, order="random", seed=0,
+                    chunk=256, telemetry=tel)
+    longest = -(-graph.num_vertices // 4)
+    assert tel["supersteps"] == -(-longest // 256)
+    assert tel["sync_rounds"] == tel["supersteps"]
+    assert tel["num_shards"] == 4
+
+
+# ------------------------------------------------------------- validation
+def test_parallel_num_shards_validation(graph):
+    with pytest.raises(ValueError, match="num_shards"):
+        partition_parallel(graph, 4, num_shards=0)
+    with pytest.raises(ValueError, match="num_shards"):
+        fennel_parallel(graph, 4, num_shards=-2)
+    with pytest.raises(ValueError, match="num_shards"):
+        PartitionSpec(algo="cuttana-parallel", k=4, params={"num_shards": 0})
+    with pytest.raises(ValueError, match="num_shards"):
+        PartitionSpec(algo="fennel-parallel", k=4, params={"num_shards": 1.5})
+
+
+def test_sharded_policy_requires_affine_scorer(small_graph):
+    from repro.core.base import FennelParams, PartitionState
+    from repro.core.engine import (
+        FennelScorer,
+        ShardedImmediatePolicy,
+        StreamEngine,
+    )
+
+    class NoAffine:
+        def __init__(self, inner):
+            self._inner = inner
+
+        def begin(self, state):
+            self._inner.begin(state)
+
+        def scores(self, state, hist):
+            return self._inner.scores(state, hist)
+
+        def on_assign(self, state, p, deg):
+            self._inner.on_assign(state, p, deg)
+
+        def on_unassign(self, state, p, deg):
+            self._inner.on_unassign(state, p, deg)
+
+    scorer = NoAffine(FennelScorer(small_graph, 4, FennelParams(), "vertex"))
+    state = PartitionState.create(small_graph, 4, 0.05, "vertex", seed=0)
+    eng = StreamEngine(
+        small_graph, state, scorer, ShardedImmediatePolicy(2), order="natural",
+    )
+    with pytest.raises(ValueError, match="affine"):
+        eng.run()
+
+
+# ----------------------------------------------------------- kernel parity
+def test_parallel_kernel_interpret_matches_host(small_graph):
+    """The sharded Pallas kernel (interpret) and the flat host bincount
+    companion must produce identical assignments."""
+    kw = dict(num_shards=3, order="random", seed=2, chunk=64)
+    host = fennel_parallel(small_graph, 4, use_pallas=False, **kw)
+    kern = fennel_parallel(small_graph, 4, interpret=True, **kw)
+    np.testing.assert_array_equal(host, kern)
+
+
+def test_sharded_kernel_matches_flat_kernel():
+    from repro.kernels.partition_score.ops import fennel_scores, fennel_scores_sharded
+
+    rng = np.random.default_rng(0)
+    s, c, d, k = 4, 33, 17, 6
+    nbr = rng.integers(-1, k, size=(s, c, d)).astype(np.int32)
+    sizes = (rng.random((s, k)) * 9).astype(np.float32)
+    out = np.asarray(fennel_scores_sharded(nbr, sizes, 0.5, 1.5, use_pallas=False))
+    assert out.shape == (s, c, k)
+    for i in range(s):
+        flat = np.asarray(fennel_scores(nbr[i], sizes[i], 0.5, 1.5, use_pallas=False))
+        np.testing.assert_allclose(out[i], flat, atol=1e-5)
+
+
+# ------------------------------------------- vectorized refiner invariants
+def _make_refiner(seed=0, kp=48, k=4):
+    from repro.core.refinement import Refiner
+
+    rng = np.random.default_rng(seed)
+    w = rng.random((kp, kp)) * (rng.random((kp, kp)) < 0.3)
+    w = np.triu(w, 1)
+    w = w + w.T
+    sub_part = rng.integers(0, k, size=kp)
+    size = rng.random(kp) + 0.25
+    return Refiner(w, sub_part, size, k, epsilon=0.5)
+
+
+def test_refiner_invariants_after_vectorized_moves():
+    r = _make_refiner(seed=1)
+    r.check_invariants()  # batched construction writes every leaf correctly
+    moves = 0
+    while moves < 12:
+        mv = r.best_move(0.0)
+        if mv is None:
+            break
+        i, dst, dec = mv
+        got = r.apply_move(i, dst)
+        assert abs(got - dec) < 1e-9
+        r.check_invariants()  # every leaf + M + loads after each batched update
+        moves += 1
+    assert moves > 0
+
+
+def test_refiner_refine_then_invariants_multiple_shapes():
+    for seed, kp, k in ((0, 32, 2), (2, 64, 5), (3, 96, 8)):
+        r = _make_refiner(seed=seed, kp=kp, k=k)
+        before = r.current_cut()
+        stats = r.refine()
+        assert r.current_cut() <= before + 1e-9
+        assert stats.stopped_reason == "maximal"
+        assert r.best_move(0.0) is None
+        r.check_invariants()
+
+
+def test_refiner_invariants_through_parallel_partition(small_graph):
+    """End-to-end: cuttana-parallel's phase 2 runs the vectorized refiner on
+    real sub-partition graphs; the result must be a valid total assignment."""
+    part = partition_parallel(
+        small_graph, 4, num_shards=2, order="random", seed=0, chunk=128,
+    )
+    assert part.shape == (small_graph.num_vertices,)
+    assert set(np.unique(part)) <= set(range(4))
