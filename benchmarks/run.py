@@ -10,9 +10,25 @@ artifact CI uploads.
 from __future__ import annotations
 
 import argparse
+import importlib
 import json
 import sys
 import time
+
+
+def _suite(module: str, kwargs=None):
+    """Lazy suite thunk: the module is imported only when the suite actually
+    runs, so one broken suite (an import-time failure included) can never
+    mask the others - ``--only scaling`` must work even if e.g. the kernels
+    suite's imports are broken. ``kwargs`` may be a dict or a zero-arg
+    callable returning one (for --full-dependent arguments)."""
+
+    def run_it():
+        mod = importlib.import_module(f"benchmarks.{module}")
+        kw = kwargs() if callable(kwargs) else (kwargs or {})
+        return mod.run(**kw)
+
+    return run_it
 
 
 def main() -> None:
@@ -26,44 +42,31 @@ def main() -> None:
 
     from repro.api.result import jsonify
 
-    from benchmarks import (
-        ablation,
-        analytics,
-        db,
-        engine_compare,
-        imbalance,
-        kernels,
-        latency,
-        quality,
-        quality_vs_k,
-        roofline,
-        scaling,
-    )
-
     suites = {
-        "quality": lambda: quality.run(
+        "quality": _suite("quality", lambda: dict(
             datasets=["social-s", "web-s", "road-s", "ldbc-s"]
             if not args.full
             else ["social-m", "web-m", "road-m", "ldbc-s"]
-        ),
-        "quality_vs_k": lambda: quality_vs_k.run(
+        )),
+        "quality_vs_k": _suite("quality_vs_k", lambda: dict(
             ks=(2, 4, 8, 16) if not args.full else (2, 4, 8, 16, 32)
-        ),
-        "imbalance": imbalance.run,
-        "ablation": ablation.run,
-        "analytics": analytics.run,
-        "db": db.run,
-        "latency": lambda: latency.run(
+        )),
+        "imbalance": _suite("imbalance"),
+        "ablation": _suite("ablation"),
+        "analytics": _suite("analytics"),
+        "db": _suite("db"),
+        "latency": _suite("latency", lambda: dict(
             dataset="social-s" if not args.full else "social-m"
-        ),
-        "engine": lambda: engine_compare.run(
+        )),
+        "engine": _suite("engine_compare", lambda: dict(
             n=30_000 if not args.full else 100_000
-        ),
-        "scaling": lambda: scaling.run(
+        )),
+        "scaling": _suite("scaling", lambda: dict(
             n=20_000 if not args.full else 100_000
-        ),
-        "kernels": kernels.run,
-        "roofline": roofline.run,
+        )),
+        "kernels": _suite("kernels"),
+        "substrate": _suite("substrate"),
+        "roofline": _suite("roofline"),
     }
     only = set(args.only.split(",")) if args.only else None
     report: dict = {"full": args.full, "suites": {}}

@@ -1,0 +1,122 @@
+"""Model/train substrate benchmark: the repaired consumer side of the
+pipeline, timed so the bench trajectory tracks it from the repair onward.
+
+Two signals, both runnable on CPU in seconds:
+
+* models-smoke wall time - one reduced-config forward + grad step for a
+  dense, an MoE, and an SSM architecture (the same path
+  ``tests/test_models_smoke.py`` enforces for correctness);
+* flash-attention kernel timing - the jnp reference at a training shape
+  plus the Pallas kernel body in interpret mode at a small shape (interpret
+  wall time tracks kernel-body complexity, not TPU speed).
+
+    PYTHONPATH=src python -m benchmarks.run --only substrate \
+        --json BENCH_substrate.json
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+
+SMOKE_ARCHS = ("qwen3-8b", "jamba-v0.1-52b", "falcon-mamba-7b")
+
+
+def _smoke_step(arch: str) -> dict:
+    from jax.sharding import Mesh
+
+    from repro.compat import use_mesh
+    from repro.configs import get_reduced_config
+    from repro.models import Axes, Model
+
+    cfg = get_reduced_config(arch)
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    model = Model(cfg, Axes(dp=("data",), tp="model"), mesh)
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)), jnp.int32)
+    labels = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 16)), jnp.int32)
+
+    def loss_fn(p):
+        logits, aux = model.forward(p, {"tokens": tokens})
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1).mean()
+        return nll + 0.01 * aux
+
+    t0 = time.perf_counter()
+    with use_mesh(mesh):
+        params = model.init(jax.random.key(0))
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        jax.block_until_ready(grads)
+    wall_s = time.perf_counter() - t0
+    assert np.isfinite(float(loss)), arch
+    return {
+        "bench": "substrate/models_smoke",
+        "arch": arch,
+        "wall_s": round(wall_s, 3),
+        "loss": float(loss),
+    }
+
+
+def run():
+    rows = []
+    for arch in SMOKE_ARCHS:
+        row = _smoke_step(arch)
+        rows.append(row)
+        emit(f"substrate/models_smoke/{arch}", row["wall_s"] * 1e6,
+             f"loss={row['loss']:.3f}")
+
+    from repro.kernels.flash_attention.ops import flash_attention
+
+    rng = np.random.default_rng(0)
+    # jnp reference at a training shape: B2 H8 T1024 D64, causal
+    q = jnp.asarray(rng.standard_normal((2, 8, 1024, 64)), jnp.float32)
+    ref = jax.jit(lambda q: flash_attention(q, q, q, use_pallas=False))
+    ref(q).block_until_ready()
+    _, us = timed(lambda: ref(q).block_until_ready(), repeats=3)
+    flops = 4 * 2 * 8 * 1024 * 1024 // 2 * 64
+    rows.append({
+        "bench": "substrate/flash_attention_ref",
+        "shape": "2x8x1024x64",
+        "us_per_call": round(us, 1),
+        "gflops": round(flops / (us / 1e6) / 1e9, 1),
+    })
+    emit("substrate/flash_attention_ref/2x8x1024x64", us,
+         f"gflops={rows[-1]['gflops']}")
+
+    # Pallas kernel body in interpret mode (small shape; correctness-bearing
+    # decode-offset path included so a repeat of the seed drift shows up here
+    # as an error, not a silent deselect)
+    qs = jnp.asarray(rng.standard_normal((1, 2, 128, 64)), jnp.float32)
+    dq = jnp.asarray(rng.standard_normal((1, 2, 1, 64)), jnp.float32)
+    kv = jnp.asarray(rng.standard_normal((1, 2, 128, 64)), jnp.float32)
+    interp = lambda: flash_attention(
+        qs, kv, kv, use_pallas=True, interpret=True
+    ).block_until_ready()
+    interp()
+    _, us = timed(interp, repeats=3)
+    rows.append({
+        "bench": "substrate/flash_attention_interpret",
+        "shape": "1x2x128x64",
+        "us_per_call": round(us, 1),
+    })
+    emit("substrate/flash_attention_interpret/1x2x128x64", us, "")
+    decode = lambda: flash_attention(
+        dq, kv, kv, q_offset=127, use_pallas=True, interpret=True
+    ).block_until_ready()
+    decode()
+    _, us = timed(decode, repeats=3)
+    rows.append({
+        "bench": "substrate/flash_attention_decode_interpret",
+        "shape": "1x2x1(kv128)x64,offset=127",
+        "us_per_call": round(us, 1),
+    })
+    emit("substrate/flash_attention_decode_interpret/offset127", us, "")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

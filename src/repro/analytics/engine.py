@@ -25,6 +25,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.analytics.localize import LocalizedGraph
 from repro.analytics.programs import VertexProgram
+from repro.compat import shard_map
 
 
 @dataclasses.dataclass
@@ -128,7 +129,7 @@ class GraphEngine:
             return out[None]
 
         spec = P(axis)
-        shard = jax.shard_map(
+        shard = shard_map(
             device_fn,
             mesh=mesh,
             in_specs=(spec, spec, spec, spec, spec),

@@ -119,10 +119,15 @@ class HeiStreamAlgoParams:
 
 @dataclasses.dataclass(frozen=True)
 class RestreamAlgoParams:
+    """Restream knobs. ``num_shards=1`` is the sequential restream;
+    ``num_shards>=2`` runs every re-pass through the S-shard superstep core
+    (same parallel engine as ``cuttana-parallel``)."""
+
     passes: int = 3
     base: str = "cuttana"
     final_refine: bool = True
     chunk: int = 512
+    num_shards: int = 1
 
 
 @dataclasses.dataclass(frozen=True)

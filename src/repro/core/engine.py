@@ -532,15 +532,21 @@ class _SuperstepRunner:
     reconcile.
     """
 
-    def __init__(self, eng: "StreamEngine", sharded: ShardedStream):
+    def __init__(
+        self, eng: "StreamEngine", sharded: ShardedStream, reassign: bool = False
+    ):
         if not hasattr(eng.scorer, "affine"):
             raise ValueError(
                 "sharded policies require a scorer with the affine contract "
                 "(scores == hist * mul + add); got "
                 f"{type(eng.scorer).__name__}"
             )
+        if reassign and eng.subp is not None:
+            # same contract as ImmediatePolicy: SubPartitioner has no unassign
+            raise ValueError("reassign mode does not support a subpartitioner")
         self.eng = eng
         self.sharded = sharded
+        self.reassign = reassign
         state = eng.state
         self.k = state.k
         self.shard_of = sharded.shard_of(eng.graph.num_vertices)
@@ -636,6 +642,8 @@ class _SuperstepRunner:
         active = sum(1 for c in counts if c)
         room = np.maximum(self.cap - loads0, 0.0) / active
         room_l = room.tolist()
+        reassign = self.reassign
+        old_flat = state.part_of[big].copy() if reassign else None
         mul_a, add_a = scorer.affine(state)  # snapshot penalty (state untouched)
         nbr_views = (
             [indices[indptr[v] : indptr[v + 1]] for v in big.tolist()]
@@ -672,12 +680,25 @@ class _SuperstepRunner:
             out = assigned_flat[row_lo : row_lo + c]
             for i in range(c):
                 v, deg = bl[i], dl[i]
-                row = H[i]
                 inc = 1 if vertex_mode else deg
+                cur = -1
+                if reassign:
+                    # pull v out of its current partition in the local view;
+                    # staying put is always allowed (mirrors the sequential
+                    # reassign rule `p != cur` in the capacity check)
+                    cur = int(old_flat[row_lo + i])
+                    v_list[cur] -= 1
+                    e_list[cur] -= deg
+                    used[cur] -= inc
+                    u = scorer.affine_update(v_list[cur], e_list[cur])
+                    if mul is not None:
+                        mul[cur] = u[0]
+                    add[cur] = u[1]
+                row = H[i]
                 best = neg_inf
                 if mul is None:
                     for p in krange:
-                        if used[p] + inc > room_l[p]:
+                        if used[p] + inc > room_l[p] and p != cur:
                             sc[p] = neg_inf
                             continue
                         s_ = row[p] + add[p]
@@ -686,7 +707,7 @@ class _SuperstepRunner:
                             best = s_
                 else:
                     for p in krange:
-                        if used[p] + inc > room_l[p]:
+                        if used[p] + inc > room_l[p] and p != cur:
                             sc[p] = neg_inf
                             continue
                         s_ = row[p] * mul[p] + add[p]
@@ -711,12 +732,23 @@ class _SuperstepRunner:
                 add[p] = u[1]
                 if subp is not None:
                     subp.assign(v, p, nbr_views[row_lo + i], deg)
-                if corr is not None:
+                if corr is not None and p != cur:
                     dst, starts = corr
-                    for j in dst[starts[i] : starts[i + 1]]:
-                        H[j][p] += 1.0
+                    if reassign:
+                        for j in dst[starts[i] : starts[i + 1]]:
+                            rj = H[j]
+                            rj[cur] -= 1.0
+                            rj[p] += 1.0
+                    else:
+                        for j in dst[starts[i] : starts[i + 1]]:
+                            H[j][p] += 1.0
             row_lo += c
         # ---------------------------------------------- boundary exchange
+        if reassign:
+            v_counts -= np.bincount(old_flat, minlength=k).astype(np.float64)
+            e_counts -= np.bincount(
+                old_flat, weights=degs.astype(np.float64), minlength=k
+            )
         state.part_of[big] = assigned_flat
         v_counts += np.bincount(assigned_flat, minlength=k).astype(np.float64)
         e_counts += np.bincount(
@@ -749,20 +781,26 @@ class ShardedImmediatePolicy:
     synchronized at the boundary. ``num_shards=1`` is *defined* as the
     sequential engine (delegates to :class:`ImmediatePolicy`), so every
     sequential parity guarantee carries over bit-for-bit.
+
+    ``reassign=True`` is the restreaming mode (every vertex already holds an
+    assignment; each superstep pulls its candidates out of their current
+    partitions in the shard-local view and may move them) - the sharded
+    counterpart of ``ImmediatePolicy(reassign=True)``.
     """
 
-    def __init__(self, num_shards: int):
+    def __init__(self, num_shards: int, reassign: bool = False):
         self.num_shards = _check_num_shards(num_shards)
+        self.reassign = reassign
 
     def run(self, eng: "StreamEngine") -> None:
         if self.num_shards == 1:
-            ImmediatePolicy().run(eng)
+            ImmediatePolicy(reassign=self.reassign).run(eng)
             eng.telemetry.update(
                 supersteps=0, sync_rounds=0, boundary_conflicts=0, num_shards=1
             )
             return
         sharded = ShardedStream.from_ids(eng.ids, self.num_shards)
-        runner = _SuperstepRunner(eng, sharded)
+        runner = _SuperstepRunner(eng, sharded, reassign=self.reassign)
         for batches in sharded.superstep_batches(eng.config.chunk):
             runner.run_superstep(batches)
         runner.finalize_telemetry()

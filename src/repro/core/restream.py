@@ -8,9 +8,12 @@ all), reassigning each vertex greedily under the balance condition; an
 optional final refinement pass applies phase-2 trades.
 
 Each re-pass is a :class:`repro.core.engine.StreamEngine` run with
-``ImmediatePolicy(reassign=True)`` - chunked kernel scoring with exact
-move corrections, bit-identical to the seed loop in
-:mod:`repro.core.legacy`.
+``ShardedImmediatePolicy(reassign=True)``: ``num_shards=1`` (the default) is
+*defined* as the sequential ``ImmediatePolicy(reassign=True)`` - chunked
+kernel scoring with exact move corrections, bit-identical to the seed loop
+in :mod:`repro.core.legacy` - while ``num_shards>=2`` gives restream passes
+the same S-shard bulk-synchronous superstep speedup as ``cuttana-parallel``
+(one packed kernel call scores every shard's frontier per superstep).
 """
 from __future__ import annotations
 
@@ -21,7 +24,13 @@ import numpy as np
 from repro.api.registry import get_info
 from repro.core.base import FennelParams, PartitionState
 from repro.core.cuttana import refine_any
-from repro.core.engine import EngineConfig, FennelScorer, ImmediatePolicy, StreamEngine
+from repro.core.engine import (
+    EngineConfig,
+    FennelScorer,
+    ShardedImmediatePolicy,
+    StreamEngine,
+    _check_num_shards,
+)
 from repro.graph.csr import CSRGraph
 
 
@@ -36,10 +45,14 @@ def partition_restream(
     order: str = "random",
     seed: int = 0,
     chunk: int = 512,
+    num_shards: int = 1,
     use_pallas: bool | None = None,
     interpret: bool = False,
     telemetry: dict | None = None,
 ) -> np.ndarray:
+    # validate eagerly: with passes=1 no re-pass engine is ever built, and
+    # with passes>=2 a late failure would waste the whole base partition
+    num_shards = _check_num_shards(num_shards)
     t0 = time.perf_counter()
     base_info = get_info(base, kind="edge-cut")
     base_telemetry: dict = {}
@@ -64,7 +77,7 @@ def partition_restream(
             graph,
             state,
             FennelScorer(graph, k, params, balance_mode),
-            ImmediatePolicy(reassign=True),
+            ShardedImmediatePolicy(num_shards, reassign=True),
             order=order,
             seed=seed + p,
             config=EngineConfig(
@@ -85,6 +98,7 @@ def partition_restream(
         telemetry.update(
             passes=passes,
             base=base,
+            num_shards=num_shards,
             kernel_calls=kernel_calls,
             base_seconds=base_s,
             stream_seconds=stream_s,

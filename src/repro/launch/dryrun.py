@@ -18,6 +18,7 @@ import traceback
 import jax
 import jax.numpy as jnp
 
+from repro.compat import use_mesh
 from repro.configs import ALIASES, SHAPES, cells_for, get_config
 from repro.launch.hlo_analysis import analyze
 from repro.launch.mesh import make_production_mesh, mesh_axes
@@ -60,7 +61,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
 
     param_sds = sds_tree(model.init_shapes(), model.param_specs(), mesh)
     meta = {"accum": 1}
-    with jax.set_mesh(mesh):  # with_sharding_constraint needs an ambient mesh
+    with use_mesh(mesh):  # with_sharding_constraint needs an ambient mesh
         if kind == "train":
             n_tp = int(mesh.shape[tp]) if cfg.activation_partitioning == "seq" else 1
             accum = int(force_accum) if force_accum else pick_accum(

@@ -202,12 +202,10 @@ class HloModule:
                     continue
                 res_t = _result_type(dm.group(2))
                 res_elems = math.prod(_dims(res_t)) if "[" in res_t else 0
-                om = re.search(rf"dot\(\s*%?({_NAME})", line)
                 cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
-                if not om or not cm:
+                if not cm:
                     continue
-                lhs_t = table.get(om.group(1), "")
-                lhs_dims = _dims(lhs_t)
+                lhs_dims = self._dot_lhs_dims(line, table)
                 contract = [int(i) for i in cm.group(1).split(",") if i]
                 try:
                     k_prod = math.prod(lhs_dims[i] for i in contract)
@@ -215,6 +213,40 @@ class HloModule:
                     k_prod = 1
                 total += 2.0 * res_elems * k_prod * m
         return total
+
+    @staticmethod
+    def _dot_lhs_dims(line: str, table: dict[str, str]) -> list[int]:
+        """Shape dims of a dot's lhs operand.
+
+        Newer HLO text annotates every operand with its type inline
+        (``dot(f32[64,32]{1,0} %lhs, ...)``), which is authoritative;
+        older text has bare operand names (``dot(%lhs, ...)``), which we
+        resolve through the computation's definition table. The old regex
+        grabbed the first token after ``dot(`` - in the new format that's
+        the dtype, so the lhs lookup silently failed and every contracting
+        dimension collapsed to 1.
+        """
+        start = line.find("dot(")
+        if start < 0:
+            return []
+        args, depth = [], 0
+        for i in range(start + len("dot("), len(line)):
+            ch = line[i]
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    args = _split_top(line[start + len("dot(") : i])
+                    break
+                depth -= 1
+        if not args:
+            return []
+        lhs = args[0].strip()
+        sm = _SHAPE_RE.search(lhs)  # inline operand type wins
+        if sm:
+            return _dims(sm.group(0))
+        nm = re.search(rf"%?({_NAME})\s*$", lhs)
+        return _dims(table.get(nm.group(1), "")) if nm else []
 
     def max_trip_count(self) -> float:
         best = 1.0

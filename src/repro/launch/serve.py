@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import use_mesh
 from repro.launch.train import build_mesh, get_model_config
 from repro.models import Axes, Model
 
@@ -56,7 +57,7 @@ def main(argv=None):
     )
     max_len = args.prompt_len + args.gen
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         params = model.init(jax.random.key(0))
         cache = model.init_cache(args.batch, max_len)
         t0 = time.time()

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import use_mesh
 from repro.configs import ALIASES, get_config, get_reduced_config
 from repro.models import Axes, Model
 from repro.models.config import LayerSpec, ModelConfig
@@ -89,7 +90,7 @@ def main(argv=None):
     )
 
     pspecs = model.param_specs()
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         params = jax.jit(
             model.init,
             out_shardings=jax.tree.map(
@@ -120,7 +121,7 @@ def main(argv=None):
 
     t0 = time.time()
     tokens_done = 0
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         for step in range(start_step, args.steps):
             batch = next(pipe)
             batch = {

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.models.layers import Axes, apply_rope, qk_head_norm, rms_norm
 
 CHUNKED_THRESHOLD = 8192
@@ -299,7 +300,7 @@ def gqa_flash_decode(q, k_cache, v_cache, pos, window, ax: Axes, mesh):
         return out.reshape(bl, h, dh).astype(q_loc.dtype)
 
     dp = _usable_dp(ax, mesh, q.shape[0])
-    return jax.shard_map(
+    return shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(
@@ -344,7 +345,7 @@ def mla_flash_decode(q_lat, q_pe, ckv_cache, kpe_cache, pos, ax: Axes, mesh):
         return out.astype(ql.dtype)
 
     dp = _usable_dp(ax, mesh, q_lat.shape[0])
-    return jax.shard_map(
+    return shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(

@@ -16,6 +16,8 @@ import jax.ad_checkpoint
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 
 @dataclasses.dataclass(frozen=True)
 class Axes:
@@ -210,16 +212,23 @@ def moe_ffn(x, p, cfg, ax: Axes, mesh):
             w_out_full = jax.lax.all_gather(w_out_full, a, axis=2, tiled=True)
             if has_gate:
                 w_gate_full = jax.lax.all_gather(w_gate_full, a, axis=1, tiled=True)
-        h = jnp.einsum("ecd,edf->ecf", grouped, w_in_full)
+        # fp32 accumulation end-to-end through the expert GEMMs: the grouped
+        # shapes depend on the EP layout (el vs e experts, n_shards*cap rows),
+        # so low-precision intermediates would round differently per mesh and
+        # break the 1-device <-> EP parity contract
+        h = jnp.einsum("ecd,edf->ecf", grouped, w_in_full,
+                       preferred_element_type=jnp.float32)
         if has_gate:
-            g = jnp.einsum("ecd,edf->ecf", grouped, w_gate_full)
+            g = jnp.einsum("ecd,edf->ecf", grouped, w_gate_full,
+                           preferred_element_type=jnp.float32)
             h = jax.nn.silu(g) * h
         elif act == "gelu":
             h = jax.nn.gelu(h)
         else:
             r = jax.nn.relu(h)
             h = r * r
-        y = jnp.einsum("ecf,efd->ecd", h, w_out_full)
+        y = jnp.einsum("ecf,efd->ecd", h, w_out_full,
+                       preferred_element_type=jnp.float32).astype(x_loc.dtype)
         back = (
             y.reshape(el, n_shards, cap, d)
             .transpose(1, 0, 2, 3)
@@ -227,10 +236,10 @@ def moe_ffn(x, p, cfg, ax: Axes, mesh):
         )
         ret = jax.lax.all_to_all(back, tp, split_axis=0, concat_axis=0, tiled=True)
         ret_flat = jnp.concatenate([ret, jnp.zeros((1, d), x_loc.dtype)], axis=0)
-        vals = ret_flat[dest] * (keep * w_topk.reshape(-1))[:, None].astype(
-            x_loc.dtype
-        )
-        out = vals.reshape(tl, top_k, d).sum(axis=1)
+        vals = ret_flat[dest].astype(jnp.float32) * (
+            keep * w_topk.reshape(-1)
+        )[:, None]
+        out = vals.reshape(tl, top_k, d).sum(axis=1).astype(x_loc.dtype)
         return out.reshape(bl, s, d), aux[None]
 
     n_dp = 1
@@ -240,7 +249,7 @@ def moe_ffn(x, p, cfg, ax: Axes, mesh):
     spec_x = P(dp_x, None, None)
     gate_spec = P(tp, dp, None) if has_gate else P(None)
     gate_arg = p.get("w_gate", jnp.zeros((1,), x.dtype))
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(spec_x, P(None, None), P(tp, dp, None), gate_spec, P(tp, None, dp)),
@@ -316,27 +325,35 @@ def moe_ffn_fshard(x, p, cfg, ax: Axes, mesh):
             recv.reshape(n_tp, el, cap, d).transpose(1, 0, 2, 3)
             .reshape(el, n_tp * cap, d)
         )
-        h = jnp.einsum("ecd,edf->ecf", grouped, w_in)  # F-slice only
+        # fp32 accumulation for the same parity reason as the train path
+        h = jnp.einsum("ecd,edf->ecf", grouped, w_in,
+                       preferred_element_type=jnp.float32)  # F-slice only
         if has_gate:
-            g = jnp.einsum("ecd,edf->ecf", grouped, w_gate)
+            g = jnp.einsum("ecd,edf->ecf", grouped, w_gate,
+                           preferred_element_type=jnp.float32)
             h = jax.nn.silu(g) * h
         elif act == "gelu":
             h = jax.nn.gelu(h)
         else:
             r = jax.nn.relu(h)
             h = r * r
-        y = jnp.einsum("ecf,efd->ecd", h, w_out)  # partial over F
+        y = jnp.einsum("ecf,efd->ecd", h, w_out,
+                       preferred_element_type=jnp.float32)  # partial over F
         for a in dp:
             y = jax.lax.psum(y, a)  # full expert outputs, weights unmoved
+        y = y.astype(x_loc.dtype)
         back = (
             y.reshape(el, n_tp, cap, d).transpose(1, 0, 2, 3).reshape(e * cap, d)
         )
         ret = jax.lax.all_to_all(back, tp, split_axis=0, concat_axis=0, tiled=True)
         ret_flat = jnp.concatenate([ret, jnp.zeros((1, d), x_loc.dtype)], axis=0)
-        vals = ret_flat[dest] * (keep * w_topk.reshape(-1))[:, None].astype(
-            x_loc.dtype
+        vals = ret_flat[dest].astype(jnp.float32) * (
+            keep * w_topk.reshape(-1)
+        )[:, None]
+        out_all = (
+            vals.reshape(tl, top_k, d).sum(axis=1).astype(x_loc.dtype)
+            .reshape(xg.shape)
         )
-        out_all = vals.reshape(tl, top_k, d).sum(axis=1).reshape(xg.shape)
         if bdiv:  # take back this shard's batch rows
             row = jax.lax.axis_index(dp[-1])
             for a in dp[:-1]:
@@ -349,7 +366,7 @@ def moe_ffn_fshard(x, p, cfg, ax: Axes, mesh):
     spec_x = P(dp_x, None, None)
     gate_spec = P(tp, None, dp) if has_gate else P(None)
     gate_arg = p.get("w_gate", jnp.zeros((1,), x.dtype))
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(spec_x, P(None, None), P(tp, None, dp), gate_spec,

@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 
 def _quant(x, scale):
     return jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
@@ -42,7 +44,7 @@ def compressed_psum_pod(grad, residual, mesh, pod_axis: str = "pod"):
         new_r = val - _quant(val, scale).astype(jnp.float32) * scale
         return deq.astype(g.dtype), new_r
 
-    return jax.shard_map(
+    return shard_map(
         local,
         mesh=mesh,
         in_specs=(P(), P()),

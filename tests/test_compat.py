@@ -1,0 +1,69 @@
+"""Guards for the repro.compat version-shim surface: the running jax must be
+inside the declared support range, and the shims must actually provide a
+working ambient-mesh context and shard_map on it."""
+import re
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import compat
+
+
+def test_jax_version_tuple():
+    assert isinstance(compat.JAX_VERSION, tuple)
+    assert len(compat.JAX_VERSION) == 3
+    assert all(isinstance(p, int) for p in compat.JAX_VERSION)
+    assert compat.JAX_VERSION == compat._parse_version(jax.__version__)
+
+
+def test_running_jax_inside_declared_range():
+    assert compat.JAX_VERSION >= compat.MIN_JAX_VERSION, (
+        f"jax {jax.__version__} is older than the supported minimum "
+        f"{'.'.join(map(str, compat.MIN_JAX_VERSION))}"
+    )
+
+
+def test_jax_at_least():
+    assert compat.jax_at_least(0, 4)
+    assert compat.jax_at_least(*compat.MIN_JAX_VERSION)
+    assert not compat.jax_at_least(99, 0)
+
+
+def test_pyproject_declares_the_same_floor():
+    """pyproject's jax pin and compat.MIN_JAX_VERSION must not drift apart."""
+    text = Path(__file__).resolve().parent.parent.joinpath("pyproject.toml").read_text()
+    m = re.search(r'"jax>=(\d+)\.(\d+)\.(\d+)', text)
+    assert m, "pyproject.toml must declare a jax>=X.Y.Z lower bound"
+    assert tuple(int(g) for g in m.groups()) == compat.MIN_JAX_VERSION
+    assert re.search(r'"jaxlib>=', text), "jaxlib range must be declared too"
+
+
+def test_use_mesh_enables_ambient_sharding():
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    with compat.use_mesh(mesh):
+        x = jnp.ones((4, 4))
+        y = jax.lax.with_sharding_constraint(x, P("data", None))
+    np.testing.assert_array_equal(np.asarray(y), np.ones((4, 4)))
+
+
+def test_compat_shard_map_runs():
+    mesh = Mesh(np.array(jax.devices()[:1]), ("w",))
+    f = compat.shard_map(
+        lambda x: x * 2.0,
+        mesh=mesh,
+        in_specs=(P("w"),),
+        out_specs=P("w"),
+        check_vma=False,
+    )
+    np.testing.assert_array_equal(np.asarray(f(jnp.ones(4))), np.full(4, 2.0))
+
+
+def test_parse_version_handles_dev_suffixes():
+    assert compat._parse_version("0.4.37") == (0, 4, 37)
+    assert compat._parse_version("0.5.0.dev20250101") == (0, 5, 0)
+    assert compat._parse_version("0.6") == (0, 6, 0)
+    assert compat._parse_version("0.4.37rc1") == (0, 4, 37)

@@ -145,6 +145,25 @@ def test_flash_attention_decode_offset():
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
 
 
+# q_offset sweep around the kv-block boundary (block_k = 128): 0, 1, one
+# below the block, exactly the block, and a non-multiple - the offsets where
+# the seed's int-index drift (and any future regression of the decode path)
+# changes which kv blocks the loop bounds visit.
+@pytest.mark.parametrize("q_offset", [0, 1, 127, 128, 200])
+@pytest.mark.parametrize("tq", [1, 4])
+def test_flash_attention_decode_offset_sweep(q_offset, tq):
+    rng = np.random.default_rng(q_offset * 7 + tq)
+    b, h, tk, dh = 2, 4, 256, 64
+    q = jnp.asarray(rng.standard_normal((b, h, tq, dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, h, tk, dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, h, tk, dh)), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, q_offset=q_offset,
+                          use_pallas=True, interpret=True)
+    want = attention_ref(q, k, v, causal=True, q_offset=q_offset)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
 # ----------------------------------------------------------------- mamba_scan
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("bsz,t,d,n", [(1, 16, 64, 8), (2, 32, 128, 16), (2, 8, 512, 16)])

@@ -7,6 +7,7 @@ import numpy as np
 import pytest
 from jax.sharding import Mesh
 
+from repro.compat import use_mesh
 from repro.configs import ALIASES, get_config, get_reduced_config, cells_for
 from repro.models import Axes, Model
 
@@ -69,7 +70,7 @@ def test_smoke_forward_and_grad(arch):
         nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1).mean()
         return nll + 0.01 * aux
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         logits, aux = model.forward(params, inputs)
         b, s = (2, 16)
         assert logits.shape == (b, s, cfg.vocab_size)
@@ -99,7 +100,7 @@ def test_smoke_decode(arch):
         # prefill image K/V into the cross-attn caches
         cache = _prefill_image_cache(model, params, cache, img)
     tok = jnp.zeros((batch, 1), jnp.int32)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         logits, cache2 = model.decode_step(params, cache, tok, jnp.int32(0))
         logits2, _ = model.decode_step(params, cache2, tok, jnp.int32(1))
     assert logits.shape == (batch, 1, cfg.vocab_size)

@@ -46,6 +46,7 @@ def test_compression_error_feedback_subprocess():
         import json
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.compat import use_mesh
         from repro.train.compression import compressed_psum_pod
 
         mesh = Mesh(np.array(jax.devices()[:8]).reshape(2, 2, 2),
@@ -53,7 +54,7 @@ def test_compression_error_feedback_subprocess():
         rng = np.random.default_rng(0)
         g = jnp.asarray(rng.standard_normal((16, 16)), jnp.float32)
         r = jnp.zeros((16, 16), jnp.float32)
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             gd = jax.device_put(g, NamedSharding(mesh, P()))
             rd = jax.device_put(r, NamedSharding(mesh, P()))
             out, new_r = jax.jit(
@@ -132,3 +133,37 @@ def test_checkpoint_save_restore_with_sharded_arrays(tmp_path):
     save_checkpoint(str(tmp_path), 1, {"x": x})
     restored, step = restore_checkpoint(str(tmp_path), {"x": x})
     np.testing.assert_array_equal(np.asarray(restored["x"]), np.asarray(x))
+
+
+def test_benchmark_suite_imports_are_lazy():
+    """--only must not import the other suites: a broken suite (import-time
+    failure included) can then never mask the one being run."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+
+    script = textwrap.dedent(
+        """
+        import sys
+        import benchmarks.run as r
+        eager = [m for m in sys.modules
+                 if m.startswith("benchmarks.") and m != "benchmarks.run"]
+        assert not eager, f"benchmarks.run eagerly imported {eager}"
+        # a missing/broken suite fails only when its thunk actually runs
+        bad = r._suite("definitely_not_a_suite")
+        try:
+            bad()
+        except ModuleNotFoundError:
+            print("lazy-ok")
+        """
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    res = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        env=env, cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=120,
+    )
+    assert res.returncode == 0, res.stderr
+    assert "lazy-ok" in res.stdout

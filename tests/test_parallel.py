@@ -297,3 +297,85 @@ def test_refiner_invariants_through_parallel_partition(small_graph):
     )
     assert part.shape == (small_graph.num_vertices,)
     assert set(np.unique(part)) <= set(range(4))
+
+
+# -------------------------------------------------------- parallel restream
+@pytest.mark.parametrize("order", ORDERS)
+def test_restream_single_shard_bit_identical(small_graph, order):
+    """num_shards=1 restream is *defined* as the sequential restream: the
+    assignments must match bit-for-bit on every stream order."""
+    from repro.core.restream import partition_restream
+
+    seq = partition_restream(small_graph, 4, order=order, seed=7)
+    one = partition_restream(small_graph, 4, order=order, seed=7, num_shards=1)
+    np.testing.assert_array_equal(seq, one)
+
+
+@pytest.mark.parametrize("num_shards", (2, 4, 8))
+def test_restream_parallel_quality_within_10_percent(graph, num_shards):
+    from repro.core.restream import partition_restream
+
+    seq = partition_restream(graph, 8, order="random", seed=1)
+    par = partition_restream(
+        graph, 8, order="random", seed=1, num_shards=num_shards
+    )
+    assert set(np.unique(par)) <= set(range(8))
+    ratio = edge_cut(graph, par) / max(edge_cut(graph, seq), 1)
+    assert ratio <= 1.10, f"S={num_shards} edge-cut ratio {ratio:.3f}"
+
+
+def test_restream_parallel_via_spec(small_graph):
+    spec = PartitionSpec(
+        algo="cuttana-restream", k=4, order="random",
+        params={"num_shards": 2, "passes": 2},
+    )
+    res = partition(small_graph, spec)
+    assert res.assignment.shape == (small_graph.num_vertices,)
+    assert res.telemetry["num_shards"] == 2
+
+
+def test_restream_num_shards_validation(graph):
+    from repro.core.restream import partition_restream
+
+    with pytest.raises(ValueError, match="num_shards"):
+        partition_restream(graph, 4, num_shards=0)
+    with pytest.raises(ValueError, match="num_shards"):
+        PartitionSpec(algo="cuttana-restream", k=4, params={"num_shards": 0})
+
+
+def test_restream_reassign_preserves_load_accounting(small_graph):
+    """After a sharded restream pass the shared counts must equal the actual
+    assignment histogram (the unassign/assign boundary exchange balances)."""
+    from repro.core.base import FennelParams, PartitionState
+    from repro.core.engine import (
+        FennelScorer,
+        ShardedImmediatePolicy,
+        StreamEngine,
+    )
+
+    g, k = small_graph, 4
+    rng = np.random.default_rng(0)
+    start = rng.integers(0, k, size=g.num_vertices)
+    state = PartitionState.create(g, k, 0.05, "edge", seed=0)
+    state.part_of[:] = start
+    state.v_counts[:] = np.bincount(start, minlength=k)
+    state.e_counts[:] = np.bincount(
+        start, weights=g.degrees.astype(np.float64), minlength=k
+    )
+    eng = StreamEngine(
+        g, state,
+        FennelScorer(g, k, FennelParams(hybrid=True), "edge"),
+        ShardedImmediatePolicy(3, reassign=True),
+        order="random", seed=1,
+    )
+    eng.run()
+    np.testing.assert_allclose(
+        state.v_counts, np.bincount(state.part_of, minlength=k)
+    )
+    np.testing.assert_allclose(
+        state.e_counts,
+        np.bincount(state.part_of, weights=g.degrees.astype(np.float64),
+                    minlength=k),
+    )
+    assert eng.telemetry["supersteps"] > 0
+    assert eng.telemetry["num_shards"] == 3
