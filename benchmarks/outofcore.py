@@ -1,0 +1,108 @@
+"""Out-of-core parity + latency study: partition from disk, bit-identically.
+
+Generates one R-MAT, dumps it as a binary edge list, converts it to the
+on-disk external CSR format (``repro.graph.external``), and partitions the
+*same* graph twice per algorithm: once fully resident (``CSRGraph``), once
+memory-mapped (``ExternalCSRGraph``). Assignments must be **bit-identical**
+(the file-backed stream feeds the identical engine loops); the rows report
+the stream-phase latency of both paths, the mapped-vs-resident graph bytes
+from ``PartitionResult`` telemetry, and the process peak RSS - the
+bench-trajectory gate (``benchmarks/run.py --baseline``) tracks the latency
+columns across PRs.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.api import PartitionSpec, partition
+from repro.graph.external import ExternalCSRGraph, convert_edge_list
+from repro.graph.generators import rmat_graph
+
+ALGOS = (
+    ("fennel", None),
+    ("cuttana", None),
+    ("cuttana-parallel", {"num_shards": 4}),
+)
+
+
+def _peak_rss_bytes() -> int:
+    """Process high-water RSS. Monotone within the process, so per-row
+    values only bound the true footprint of a single run from above."""
+    try:
+        import resource
+
+        rss_kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+        return int(rss_kb) * 1024
+    except Exception:  # pragma: no cover - non-POSIX fallback
+        return 0
+
+
+def _stream_seconds(result) -> float:
+    t = result.timings
+    return t.get("phase1_seconds", t.get("stream_seconds", t["total_s"]))
+
+
+def run(n: int = 40_000, avg_degree: int = 12, k: int = 8, seed: int = 0):
+    graph = rmat_graph(n, avg_degree=avg_degree, seed=seed)
+    rows = []
+    with tempfile.TemporaryDirectory() as td:
+        edges_path = os.path.join(td, "edges.npy")
+        np.save(edges_path, graph.edges_array())
+        bin_path = os.path.join(td, "graph.bin")
+        t0 = time.perf_counter()
+        stats = convert_edge_list(edges_path, bin_path, num_vertices=n)
+        convert_s = time.perf_counter() - t0
+        ext = ExternalCSRGraph(bin_path)
+        if not np.array_equal(np.asarray(ext.indptr), graph.indptr) or not (
+            np.array_equal(np.asarray(ext.indices), graph.indices)
+        ):
+            raise AssertionError("converted CSR differs from the in-memory build")
+        rows.append(dict(
+            bench=f"outofcore/rmat{n}/convert", convert_seconds=convert_s,
+            file_bytes=stats["file_bytes"], num_edges=stats["num_edges"],
+        ))
+        emit(f"outofcore/rmat{n}/convert", convert_s * 1e6,
+             f"file_bytes={stats['file_bytes']}")
+
+        for algo, params in ALGOS:
+            spec = PartitionSpec(
+                algo=algo, k=k, balance_mode="edge", order="random",
+                seed=seed, params=params,
+            )
+            results = {}
+            for backing, g in (("resident", graph), ("mapped", ext)):
+                result = partition(g, spec)
+                results[backing] = result
+                secs = _stream_seconds(result)
+                tel = result.telemetry
+                rows.append(dict(
+                    bench=f"outofcore/rmat{n}/{algo}/{backing}",
+                    algo=algo, backing=backing, stream_seconds=secs,
+                    total_seconds=result.timings["total_s"],
+                    edge_cut=result.quality()["edge_cut"],
+                    peak_graph_bytes=tel["peak_graph_bytes"],
+                    mapped_graph_bytes=tel["mapped_graph_bytes"],
+                    peak_rss_bytes=_peak_rss_bytes(),
+                    spec=spec.to_dict(),
+                ))
+                emit(
+                    f"outofcore/rmat{n}/{algo}/{backing}", secs * 1e6,
+                    f"graph_bytes={tel['peak_graph_bytes']};"
+                    f"rss={_peak_rss_bytes()}",
+                )
+            if not np.array_equal(
+                results["resident"].assignment, results["mapped"].assignment
+            ):
+                raise AssertionError(
+                    f"{algo}: file-backed assignments differ from in-memory"
+                )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -4,8 +4,15 @@ every suite's structured rows (built from ``PartitionResult``s in the
 api-driven suites) into one machine-readable report - the perf-trajectory
 artifact CI uploads.
 
+With ``--baseline`` the run is additionally *gated* against a committed
+report (repo-root ``BENCH_partition.json``): stream-phase latency or
+edge-cut regressing past ``--tolerance`` (latency optionally loosened via
+``--latency-tolerance`` - CI wall clocks are noisy) exits non-zero, so the
+perf trajectory is enforced, not just recorded.
+
     PYTHONPATH=src python -m benchmarks.run [--full] [--only quality,db,...]
-                                           [--json out.json]
+        [--json out.json] [--baseline BENCH_partition.json]
+        [--tolerance 0.15] [--latency-tolerance 0.75]
 """
 from __future__ import annotations
 
@@ -38,6 +45,14 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--json", default=None, metavar="OUT",
                     help="write all suites' structured rows to this file")
+    ap.add_argument("--baseline", default=None, metavar="PATH",
+                    help="gate this run against a committed report; exits "
+                         "non-zero on latency/edge-cut regressions")
+    ap.add_argument("--tolerance", type=float, default=0.15,
+                    help="allowed relative regression vs the baseline")
+    ap.add_argument("--latency-tolerance", type=float, default=None,
+                    help="looser bound for wall-clock metrics only "
+                         "(default: same as --tolerance)")
     args = ap.parse_args()
 
     from repro.api.result import jsonify
@@ -64,6 +79,9 @@ def main() -> None:
         "scaling": _suite("scaling", lambda: dict(
             n=20_000 if not args.full else 100_000
         )),
+        "outofcore": _suite("outofcore", lambda: dict(
+            n=40_000 if not args.full else 125_000
+        )),
         "kernels": _suite("kernels"),
         "substrate": _suite("substrate"),
         "roofline": _suite("roofline"),
@@ -88,6 +106,34 @@ def main() -> None:
             json.dump(report, f, indent=2, sort_keys=True)
         print(f"# wrote {args.json}", file=sys.stderr)
     print(f"# total {report['seconds']:.1f}s", file=sys.stderr)
+    if args.baseline:
+        from benchmarks.trajectory import compare_reports
+
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+        regressions, compared = compare_reports(
+            report, baseline, args.tolerance, args.latency_tolerance
+        )
+        if compared == 0:
+            print(
+                f"# BENCH GATE FAILED: no comparable rows between this run "
+                f"and {args.baseline} - the gate checked nothing",
+                file=sys.stderr,
+            )
+            sys.exit(2)
+        for line in regressions:
+            print(f"# REGRESSION {line}", file=sys.stderr)
+        if regressions:
+            print(
+                f"# BENCH GATE FAILED: {len(regressions)} regression(s) vs "
+                f"{args.baseline} ({compared} metrics compared)",
+                file=sys.stderr,
+            )
+            sys.exit(2)
+        print(
+            f"# bench gate OK vs {args.baseline} ({compared} metrics compared)",
+            file=sys.stderr,
+        )
 
 
 if __name__ == "__main__":

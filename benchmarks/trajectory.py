@@ -1,0 +1,109 @@
+"""Bench-trajectory comparator: gate the perf history, not just today's run.
+
+``benchmarks/run.py --json`` emits one structured report per run; this module
+compares such a report against a committed baseline (repo-root
+``BENCH_partition.json``) and flags **regressions**:
+
+* quality metrics (``edge_cut``) worse than ``baseline * (1 + tolerance)``;
+* latency metrics (``stream_seconds``, ``convert_seconds``) worse than
+  ``baseline * (1 + latency_tolerance)`` - wall clocks are noisier than the
+  deterministic seeded quality numbers, so CI may loosen just this bound;
+* baseline rows that *disappeared* from a suite that still ran (silent
+  coverage loss counts as a regression - a gate that compares nothing is no
+  gate).
+
+Rows are matched by a stable key: the row's explicit ``bench`` field when
+present, else ``suite/algo[/sN][/backing]``. Only suites present in the
+current report are compared, so ``--only scaling,outofcore`` runs gate
+against the matching slice of a full baseline.
+
+``compare_reports`` is pure (dicts in, findings out) and unit-tested in
+``tests/test_outofcore.py``, including the injected-2x-latency case the CI
+gate must catch.
+"""
+from __future__ import annotations
+
+__all__ = ["row_key", "collect_rows", "compare_reports"]
+
+# metric name -> kind; "lower is better" for all of them
+QUALITY_METRICS = ("edge_cut",)
+LATENCY_METRICS = ("stream_seconds", "convert_seconds")
+
+
+def row_key(suite: str, row: dict) -> str:
+    """Stable identity of a benchmark row across runs."""
+    if "bench" in row:
+        return str(row["bench"])
+    parts = [suite]
+    if "algo" in row:
+        parts.append(str(row["algo"]))
+    if "num_shards" in row:
+        parts.append(f"s{row['num_shards']}")
+    if "backing" in row:
+        parts.append(str(row["backing"]))
+    return "/".join(parts)
+
+
+def collect_rows(report: dict) -> dict[str, dict]:
+    """Flatten a run report into ``key -> row`` (non-dict rows ignored)."""
+    out: dict[str, dict] = {}
+    for suite, payload in (report.get("suites") or {}).items():
+        for row in (payload or {}).get("rows") or []:
+            if isinstance(row, dict):
+                out[row_key(suite, row)] = row
+    return out
+
+
+def _suite_of(key: str) -> str:
+    return key.split("/", 1)[0]
+
+
+def compare_reports(
+    current: dict,
+    baseline: dict,
+    tolerance: float = 0.15,
+    latency_tolerance: float | None = None,
+) -> tuple[list[str], int]:
+    """Compare a current run report against a baseline report.
+
+    Returns ``(regressions, compared)``: human-readable regression lines
+    (empty == within tolerance) and the number of metric comparisons made.
+    A caller gating CI should fail on ``regressions`` *and* on
+    ``compared == 0`` - zero overlap means the gate checked nothing.
+    """
+    lat_tol = tolerance if latency_tolerance is None else latency_tolerance
+    cur_rows = collect_rows(current)
+    base_rows = collect_rows(baseline)
+    cur_suites = set((current.get("suites") or {}).keys())
+    regressions: list[str] = []
+    compared = 0
+    for key in sorted(base_rows):
+        if _suite_of(key) not in cur_suites:
+            continue  # suite not run this time: out of scope, not a regression
+        crow = cur_rows.get(key)
+        if crow is None:
+            regressions.append(
+                f"{key}: row present in baseline but missing from this run"
+            )
+            continue
+        brow = base_rows[key]
+        for metric, tol in (
+            *((m, tolerance) for m in QUALITY_METRICS),
+            *((m, lat_tol) for m in LATENCY_METRICS),
+        ):
+            bval = brow.get(metric)
+            cval = crow.get(metric)
+            if not isinstance(bval, (int, float)) or not isinstance(
+                cval, (int, float)
+            ):
+                continue
+            if bval <= 0:
+                continue  # degenerate baseline: nothing meaningful to gate
+            compared += 1
+            ratio = cval / bval
+            if ratio > 1.0 + tol:
+                regressions.append(
+                    f"{key}: {metric} regressed {ratio:.2f}x "
+                    f"({bval:.6g} -> {cval:.6g}, tolerance +{tol:.0%})"
+                )
+    return regressions, compared

@@ -1,11 +1,15 @@
 """Headless spec runner:
 
     python -m repro.api.cli partition --spec spec.json --out report.json \\
-        [--dataset social-s | --rmat 20000] [--with-analytics] [--with-db]
+        [--dataset social-s | --rmat 20000 | --graph graph.bin] \\
+        [--with-analytics] [--with-db]
     python -m repro.api.cli list
 
 ``partition`` loads a :class:`~repro.api.spec.PartitionSpec` from JSON, runs
-it on the requested graph (a named benchmark dataset or a seeded R-MAT), and
+it on the requested graph (a named benchmark dataset, a seeded R-MAT, or an
+on-disk graph file partitioned out-of-core via ``--graph`` - convert an edge
+list with ``scripts/convert_graph.py`` first; the spec's own ``source`` field
+is used when no graph flag is given), and
 emits a structured report (spec, timings, telemetry, quality metrics, and
 optionally the analytics cost model / DB workload numbers). ``list`` prints
 the declarative registry.
@@ -34,12 +38,20 @@ def _build_parser() -> argparse.ArgumentParser:
                    help="named benchmark dataset (e.g. social-s, ldbc-s)")
     g.add_argument("--rmat", type=int, default=None, metavar="N",
                    help="generate an N-vertex R-MAT graph instead")
+    g.add_argument("--graph", default=None, metavar="PATH",
+                   help="partition an on-disk graph file: a .bin external "
+                        "CSR (memory-mapped, out-of-core) or a .npz "
+                        "CSRGraph dump")
     p.add_argument("--avg-degree", type=float, default=16.0,
                    help="R-MAT average degree (with --rmat)")
     p.add_argument("--graph-seed", type=int, default=0,
                    help="generator seed for --dataset/--rmat")
     p.add_argument("--assignment-out", default=None,
                    help="also save the raw assignment as .npy")
+    p.add_argument("--skip-quality", action="store_true",
+                   help="omit quality metrics from the report (they scan "
+                        "the whole edge set - skip for graphs that "
+                        "deliberately exceed RAM)")
     p.add_argument("--with-analytics", action="store_true",
                    help="include the analytics cost model in the report")
     p.add_argument("--analytics-iters", type=int, default=30)
@@ -51,13 +63,26 @@ def _build_parser() -> argparse.ArgumentParser:
     return ap
 
 
-def _load_graph(args):
+def _load_graph(args, spec):
+    if args.graph is not None:
+        # file-only, as the help text promises: generator sources belong in
+        # the spec's own `source` field
+        from repro.graph.external import load_graph_file
+
+        return load_graph_file(args.graph), args.graph
     if args.rmat is not None:
         from repro.graph.generators import rmat_graph
 
         return rmat_graph(
             args.rmat, avg_degree=args.avg_degree, seed=args.graph_seed
         ), f"rmat:{args.rmat}"
+    if args.dataset is None and spec.source is not None:
+        # no graph flags: fall back to the spec's own source, resolved with
+        # spec.seed exactly like repro.api.partition(spec) - the same spec
+        # JSON must mean the same graph through either entry point
+        from repro.graph.external import load_graph_source
+
+        return load_graph_source(spec.source, seed=spec.seed), spec.source
     from repro.graph.generators import DATASETS, load_dataset
 
     name = args.dataset or "social-s"
@@ -73,9 +98,9 @@ def _cmd_partition(args) -> int:
 
     spec_text = Path(args.spec).read_text()
     spec = PartitionSpec.from_json(spec_text)
-    graph, graph_name = _load_graph(args)
+    graph, graph_name = _load_graph(args, spec)
     result = partition(graph, spec)
-    report = result.to_report()
+    report = result.to_report(include_quality=not args.skip_quality)
     report["graph"]["name"] = graph_name
     if args.with_analytics:
         report["analytics"] = result.analytics(

@@ -186,8 +186,15 @@ class PartitionResult:
         }
 
     # ----------------------------------------------------------------- report
-    def to_report(self, include_assignment: bool = False) -> dict:
-        """JSON-serializable structured report (the CLI's output row)."""
+    def to_report(
+        self, include_assignment: bool = False, include_quality: bool = True
+    ) -> dict:
+        """JSON-serializable structured report (the CLI's output row).
+
+        ``include_quality=False`` skips the quality metrics, which scan the
+        whole edge set and materialize O(|E|) scratch - the escape hatch for
+        out-of-core runs where the graph deliberately exceeds RAM.
+        """
         report = {
             "spec": self.spec.to_dict(),
             "graph": {
@@ -196,8 +203,9 @@ class PartitionResult:
             },
             "timings": jsonify(self.timings),
             "telemetry": jsonify(self.telemetry),
-            "quality": jsonify(self.quality()),
         }
+        if include_quality:
+            report["quality"] = jsonify(self.quality())
         if include_assignment:
             report["assignment"] = self.assignment.tolist()
         return report

@@ -29,19 +29,48 @@ _TIMING_KEYS = (
 )
 
 
-def partition(graph: CSRGraph, spec: PartitionSpec | dict | str, /, **overrides):
+def partition(
+    graph: CSRGraph | None,
+    spec: PartitionSpec | dict | str | None = None,
+    /,
+    **overrides,
+):
     """Run ``spec`` on ``graph`` and wrap the outcome in a PartitionResult.
 
     ``spec`` may be a :class:`PartitionSpec`, a dict of its fields, or just an
     algorithm name; ``overrides`` are applied on top (e.g.
     ``partition(g, "cuttana", k=8, balance_mode="edge")``).
+
+    ``graph`` may be any object with the CSR read surface - a resident
+    :class:`CSRGraph` or a memory-mapped
+    :class:`~repro.graph.external.ExternalCSRGraph` - or ``None``, in which
+    case the graph is resolved from ``spec.source`` (``rmat:*``,
+    ``dataset:*``, or an on-disk graph path). A spec with a source can also
+    be passed alone: ``partition(spec)``.
     """
+    if spec is None and isinstance(graph, (PartitionSpec, dict, str)):
+        # partition(spec_with_source) convenience form
+        graph, spec = None, graph
+    if spec is None:
+        raise ValueError(
+            "partition() needs a spec: a PartitionSpec, a dict of its "
+            "fields, or an algorithm name"
+        )
     if isinstance(spec, str):
         spec = PartitionSpec(algo=spec, **overrides)
     elif isinstance(spec, dict):
         spec = PartitionSpec.from_dict({**spec, **overrides})
     elif overrides:
         spec = spec.replace(**overrides)
+    if graph is None:
+        if spec.source is None:
+            raise ValueError(
+                "partition() needs a graph: pass one explicitly or set "
+                "spec.source (rmat:<n>, dataset:<name>, or a graph path)"
+            )
+        from repro.graph.external import load_graph_source
+
+        graph = load_graph_source(spec.source, seed=spec.seed)
     info = get_info(spec.algo)
     fn = info.resolve()
     kwargs = build_spec_kwargs(info, spec)
@@ -63,6 +92,21 @@ def partition(graph: CSRGraph, spec: PartitionSpec | dict | str, /, **overrides)
     for key in _TIMING_KEYS:
         if key in telemetry:
             timings[key] = telemetry.pop(key)
+    # graph-memory accounting: for a mapped (out-of-core) graph the resident
+    # footprint is just its host-side caches; for an in-memory CSR it is the
+    # whole structure. mapped_graph_bytes is the file-backed remainder.
+    backing = getattr(graph, "backing", "resident")
+    if backing == "mapped":
+        peak_graph_bytes = int(graph.nbytes_resident)
+        mapped_graph_bytes = int(graph.nbytes_mapped)
+    else:
+        peak_graph_bytes = int(graph.indptr.nbytes + graph.indices.nbytes)
+        mapped_graph_bytes = 0
+    telemetry.update(
+        graph_backing=backing,
+        peak_graph_bytes=peak_graph_bytes,
+        mapped_graph_bytes=mapped_graph_bytes,
+    )
     return PartitionResult(
         spec=spec,
         graph=graph,

@@ -37,6 +37,11 @@ class PartitionSpec:
     order: str = "natural"
     seed: int = 0
     params: Any = None
+    # where the graph comes from when the caller does not pass one:
+    # "rmat:<n>[:<avg_degree>]", "dataset:<name>", or a path to an on-disk
+    # graph (".bin" external CSR partitioned out-of-core, ".npz" CSRGraph
+    # dump). None means the caller supplies the graph object.
+    source: str | None = None
 
     def __post_init__(self) -> None:
         info = get_info(self.algo)
@@ -80,6 +85,12 @@ class PartitionSpec:
                         f"(accepted spec fields: {info.common or ('none',)}); "
                         f"leave it at its default {default!r}"
                     )
+        if self.source is not None:
+            # syntax-only validation (no filesystem I/O): a malformed source
+            # fails at construction, a missing file fails at load time
+            from repro.graph.external import validate_source
+
+            validate_source(self.source)
         object.__setattr__(self, "params", _normalize_params(info, self.params))
 
     # ------------------------------------------------------------ properties
@@ -97,6 +108,8 @@ class PartitionSpec:
             "order": self.order,
             "seed": self.seed,
         }
+        if self.source is not None:
+            d["source"] = self.source
         if self.params is not None:
             d["params"] = dataclasses.asdict(self.params)
         return d

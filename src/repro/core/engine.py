@@ -41,6 +41,14 @@ Extension points: implement ``Scorer`` for a new scoring rule (e.g. a
 weighted-affinity variant) or ``PlacementPolicy`` for a new placement
 discipline and wire them into a thin ``partition()`` wrapper - see
 ``src/repro/core/README.md``.
+
+Out-of-core contract: every graph access in this module goes through the CSR
+read surface (``indptr``/``indices`` slicing and fancy indexing, ``degrees``,
+``num_vertices``), never through whole-graph materialization - so a
+memory-mapped :class:`~repro.graph.external.ExternalCSRGraph` streams through
+every policy with assignments bit-identical to the resident path (pinned in
+``tests/test_outofcore.py``). Keep it that way: a chunk may gather the pages
+it touches, but nothing here may copy ``indices`` wholesale.
 """
 from __future__ import annotations
 
@@ -943,7 +951,7 @@ class StreamEngine:
 
     def __init__(
         self,
-        graph: CSRGraph,
+        graph: CSRGraph,  # or any CSR read surface, e.g. ExternalCSRGraph
         state: PartitionState,
         scorer: Scorer,
         policy: PlacementPolicy,

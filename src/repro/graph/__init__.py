@@ -1,5 +1,14 @@
 """Graph substrate: CSR structures, generators, streaming readers, metrics."""
 from repro.graph.csr import CSRGraph
+from repro.graph.external import (
+    ExternalCSRGraph,
+    convert_csr,
+    convert_edge_list,
+    load_graph_file,
+    load_graph_source,
+    validate_source,
+    write_external_csr,
+)
 from repro.graph.generators import (
     rmat_graph,
     powerlaw_cluster_graph,
@@ -16,6 +25,13 @@ from repro.graph.metrics import (
 
 __all__ = [
     "CSRGraph",
+    "ExternalCSRGraph",
+    "convert_csr",
+    "convert_edge_list",
+    "load_graph_file",
+    "load_graph_source",
+    "validate_source",
+    "write_external_csr",
     "rmat_graph",
     "powerlaw_cluster_graph",
     "road_graph",

@@ -1,0 +1,568 @@
+"""Out-of-core graph substrate: partition from disk without materializing CSR.
+
+The paper's premise is that "graphs that require distributed settings are
+often too large to fit in the main memory of a single machine" (§I), yet a
+fully resident :class:`~repro.graph.csr.CSRGraph` needs ``8(|V|+1) + 8|E|``
+bytes before the first vertex streams. This module closes that gap with a
+binary on-disk CSR format plus two consumers:
+
+* :func:`convert_edge_list` - a bounded-memory two-pass converter that turns
+  a text (SNAP-style ``.txt``/``.csv``) or binary (``.npy``) edge list into
+  the on-disk format. Pass 1 canonicalizes edges in chunks (drop self-loops,
+  ``(lo, hi)`` ordering), sorts each chunk and spills it as a run; a
+  vectorised k-way run merge dedupes globally while counting degrees. Pass 2
+  re-streams the deduped sorted edges and scatters both directions into the
+  memory-mapped ``indices`` region. Peak host memory is ``O(|V|)`` plus one
+  chunk - the edge set is never resident. Rows come out sorted by neighbour
+  id, so the result is *byte-identical* to ``CSRGraph.from_edges`` on the
+  same input (pinned in ``tests/test_outofcore.py``).
+* :class:`ExternalCSRGraph` - memory-maps ``indptr``/``indices`` straight
+  from the file and exposes the same ``num_vertices`` / ``neighbors`` /
+  ``degrees`` surface ``CSRGraph`` does, so ``vertex_stream``,
+  ``ShardedStream.superstep_batches`` and the chunked ``StreamEngine`` loops
+  consume it unchanged: neighbour batches are sliced from the mapped file per
+  chunk, and assignments are bit-identical to the in-memory path.
+
+File layout (version 1, little-endian)::
+
+    [ 0:8 ]   magic  b"XCSRGRPH"
+    [ 8:12]   uint32 format version (1)
+    [12:16]   uint32 flags (reserved, 0)
+    [16:24]   int64  num_vertices                  (n)
+    [24:32]   int64  len(indices) == 2|E|          (h)
+    [32:64]   reserved (zeros)
+    [64:64+8(n+1)]          indptr  int64[n+1]
+    [64+8(n+1): +4h]        indices int32[h]
+
+:func:`load_graph_source` resolves the ``PartitionSpec.source`` grammar
+(``rmat:*`` / ``dataset:*`` / a path) into a graph object;
+:func:`validate_source` is its construction-time syntax check.
+"""
+from __future__ import annotations
+
+import itertools
+import os
+import struct
+import tempfile
+import warnings
+from typing import Iterator
+
+import numpy as np
+
+from repro.graph.csr import CSRGraph
+
+__all__ = [
+    "MAGIC",
+    "FORMAT_VERSION",
+    "HEADER_BYTES",
+    "ExternalCSRGraph",
+    "write_external_csr",
+    "convert_edge_list",
+    "convert_csr",
+    "load_graph_file",
+    "load_graph_source",
+    "validate_source",
+]
+
+MAGIC = b"XCSRGRPH"
+FORMAT_VERSION = 1
+HEADER_BYTES = 64
+_INDPTR_DTYPE = np.dtype("<i8")
+_INDICES_DTYPE = np.dtype("<i4")
+# keys pack (lo, hi) into one int64: ids must fit the int32 indices anyway
+_MAX_VERTEX_ID = np.int64(2**31 - 1)
+
+
+def _pack_header(num_vertices: int, half_edges: int) -> bytes:
+    head = struct.pack(
+        "<8sII qq", MAGIC, FORMAT_VERSION, 0, int(num_vertices), int(half_edges)
+    )
+    return head + b"\0" * (HEADER_BYTES - len(head))
+
+
+def _file_layout(num_vertices: int, half_edges: int) -> tuple[int, int, int]:
+    """(indptr_offset, indices_offset, total_file_bytes)."""
+    indptr_off = HEADER_BYTES
+    indices_off = indptr_off + _INDPTR_DTYPE.itemsize * (num_vertices + 1)
+    total = indices_off + _INDICES_DTYPE.itemsize * half_edges
+    return indptr_off, indices_off, total
+
+
+# ---------------------------------------------------------------- the graph
+class ExternalCSRGraph:
+    """A CSR graph memory-mapped from the on-disk binary format.
+
+    Exposes the ``CSRGraph`` read surface (``indptr`` / ``indices`` /
+    ``num_vertices`` / ``num_edges`` / ``degrees`` / ``neighbors`` /
+    ``degree`` / ``iter_adjacency``) over ``np.memmap`` arrays, so every
+    partitioner, stream order, and engine chunk loop works unchanged - a
+    chunk's neighbour batch is a fancy-indexed *copy* of the mapped pages it
+    touches, never the whole graph. The OS pages adjacency in and out as the
+    stream advances; only ``O(|V|)`` bookkeeping is ever resident.
+    """
+
+    backing = "mapped"
+
+    def __init__(self, path: str | os.PathLike):
+        self.path = os.fspath(path)
+        try:
+            size = os.path.getsize(self.path)
+        except OSError as e:
+            raise ValueError(f"cannot open external graph {self.path!r}: {e}") from e
+        if size < HEADER_BYTES:
+            raise ValueError(
+                f"{self.path!r} is not an external CSR graph: file is "
+                f"{size} bytes, smaller than the {HEADER_BYTES}-byte header"
+            )
+        with open(self.path, "rb") as f:
+            head = f.read(HEADER_BYTES)
+        magic, version, _flags, n, h = struct.unpack("<8sII qq", head[:32])
+        if magic != MAGIC:
+            raise ValueError(
+                f"{self.path!r} is not an external CSR graph "
+                f"(bad magic {magic!r}; expected {MAGIC!r})"
+            )
+        if version != FORMAT_VERSION:
+            raise ValueError(
+                f"{self.path!r}: unsupported format version {version} "
+                f"(this build reads version {FORMAT_VERSION})"
+            )
+        if n < 0 or h < 0 or h % 2:
+            raise ValueError(
+                f"{self.path!r}: corrupt header (num_vertices={n}, "
+                f"len(indices)={h})"
+            )
+        indptr_off, indices_off, expected = _file_layout(n, h)
+        if size != expected:
+            raise ValueError(
+                f"{self.path!r}: truncated or corrupt - file is {size} bytes "
+                f"but the header declares {expected} "
+                f"(num_vertices={n}, len(indices)={h})"
+            )
+        self._n = int(n)
+        self._half = int(h)
+        self.indptr = np.memmap(
+            self.path, dtype=_INDPTR_DTYPE, mode="r", offset=indptr_off,
+            shape=(self._n + 1,),
+        )
+        self.indices = np.memmap(
+            self.path, dtype=_INDICES_DTYPE, mode="r", offset=indices_off,
+            shape=(self._half,),
+        )
+        if self._n and (
+            int(self.indptr[0]) != 0 or int(self.indptr[-1]) != self._half
+        ):
+            raise ValueError(
+                f"{self.path!r}: corrupt indptr (indptr[0]={int(self.indptr[0])}, "
+                f"indptr[-1]={int(self.indptr[-1])}, len(indices)={self._half})"
+            )
+        self._degrees: np.ndarray | None = None
+
+    # ----------------------------------------------------- CSRGraph surface
+    @property
+    def num_vertices(self) -> int:
+        return self._n
+
+    @property
+    def num_edges(self) -> int:
+        return self._half // 2
+
+    @property
+    def degrees(self) -> np.ndarray:
+        # cached: the engines ask repeatedly and a diff over the mapped
+        # indptr is the only O(|V|) array this graph ever materializes
+        if self._degrees is None:
+            self._degrees = np.diff(self.indptr)
+        return self._degrees
+
+    def neighbors(self, v: int) -> np.ndarray:
+        return self.indices[self.indptr[v] : self.indptr[v + 1]]
+
+    def degree(self, v: int) -> int:
+        return int(self.indptr[v + 1] - self.indptr[v])
+
+    def iter_adjacency(self, order=None) -> Iterator[tuple[int, np.ndarray]]:
+        ids = range(self._n) if order is None else order
+        for v in ids:
+            yield int(v), self.neighbors(int(v))
+
+    def edges_array(self) -> np.ndarray:
+        """(|E|, 2) array with each undirected edge listed once (u < v).
+
+        Same contract as ``CSRGraph.edges_array`` - the vertex-cut edge
+        partitioners (hdrf/ginger) consume it. Note the *result* is O(|E|)
+        resident by definition; the scan over the mapped file is chunked so
+        no symmetric 2|E| intermediate is ever materialized.
+        """
+        out = np.empty((self.num_edges, 2), dtype=np.int64)
+        filled = 0
+        chunk = 1 << 20
+        indptr = self.indptr
+        for lo in range(0, self._n, chunk):
+            hi = min(lo + chunk, self._n)
+            degs = np.asarray(indptr[lo + 1 : hi + 1]) - np.asarray(indptr[lo:hi])
+            src = np.repeat(np.arange(lo, hi, dtype=np.int64), degs)
+            dst = np.asarray(
+                self.indices[indptr[lo] : indptr[hi]], dtype=np.int64
+            )
+            mask = src < dst
+            m = int(mask.sum())
+            out[filled : filled + m, 0] = src[mask]
+            out[filled : filled + m, 1] = dst[mask]
+            filled += m
+        assert filled == out.shape[0]
+        return out
+
+    def subgraph_edge_count(self, mask: np.ndarray) -> int:
+        """Edges with both endpoints inside ``mask`` (bool[|V|]), chunked
+        over the mapped adjacency like ``CSRGraph.subgraph_edge_count``."""
+        total = 0
+        chunk = 1 << 20
+        indptr = self.indptr
+        for lo in range(0, self._n, chunk):
+            hi = min(lo + chunk, self._n)
+            degs = np.asarray(indptr[lo + 1 : hi + 1]) - np.asarray(indptr[lo:hi])
+            src = np.repeat(np.arange(lo, hi, dtype=np.int64), degs)
+            dst = np.asarray(self.indices[indptr[lo] : indptr[hi]])
+            total += int((mask[src] & mask[dst]).sum())
+        return total // 2
+
+    # --------------------------------------------------------------- memory
+    @property
+    def nbytes_mapped(self) -> int:
+        """Bytes of graph data reachable through the mapping (the file)."""
+        return _file_layout(self._n, self._half)[2]
+
+    @property
+    def nbytes_resident(self) -> int:
+        """Bytes of graph data held in ordinary host arrays (the degree
+        cache, once computed) - what an OOM accountant should charge."""
+        return 0 if self._degrees is None else int(self._degrees.nbytes)
+
+    # -------------------------------------------------------------- escape
+    def to_csr(self) -> CSRGraph:
+        """Materialize a fully resident ``CSRGraph`` (for small graphs)."""
+        return CSRGraph(
+            indptr=np.asarray(self.indptr).copy(),
+            indices=np.asarray(self.indices).copy(),
+        )
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (
+            f"ExternalCSRGraph(|V|={self.num_vertices}, |E|={self.num_edges}, "
+            f"path={self.path!r})"
+        )
+
+
+# ----------------------------------------------------------------- writers
+def write_external_csr(
+    path: str | os.PathLike, indptr: np.ndarray, indices: np.ndarray
+) -> None:
+    """Write CSR arrays in the on-disk format (header + indptr + indices)."""
+    indptr = np.ascontiguousarray(indptr, dtype=_INDPTR_DTYPE)
+    indices = np.ascontiguousarray(indices, dtype=_INDICES_DTYPE)
+    n = int(indptr.shape[0]) - 1
+    if n < 0:
+        raise ValueError("indptr must have at least one entry")
+    with open(path, "wb") as f:
+        f.write(_pack_header(n, int(indices.shape[0])))
+        indptr.tofile(f)
+        indices.tofile(f)
+
+
+def convert_csr(graph: CSRGraph, path: str | os.PathLike) -> None:
+    """Dump an in-memory ``CSRGraph`` into the on-disk format."""
+    write_external_csr(path, graph.indptr, graph.indices)
+
+
+# --------------------------------------------------------------- converter
+def _iter_edge_chunks(
+    path: str, chunk_edges: int, delimiter: str | None
+) -> Iterator[tuple[np.ndarray, np.ndarray]]:
+    """Yield ``(src, dst)`` int64 chunks from a text or ``.npy`` edge list.
+
+    Text: ``#``-comment lines skipped, first two whitespace- (or
+    ``delimiter``-) separated columns used, extra columns (weights,
+    timestamps) ignored. ``.npy``: the array is memory-mapped and sliced.
+    """
+    if path.endswith(".npy"):
+        arr = np.load(path, mmap_mode="r")
+        if arr.ndim != 2 or arr.shape[1] < 2:
+            raise ValueError(
+                f"{path!r}: expected an (m, >=2) edge array, got shape "
+                f"{arr.shape}"
+            )
+        for lo in range(0, arr.shape[0], chunk_edges):
+            block = np.asarray(arr[lo : lo + chunk_edges, :2], dtype=np.int64)
+            yield block[:, 0], block[:, 1]
+        return
+    if delimiter is None and path.endswith(".csv"):
+        delimiter = ","
+    with open(path, "rt") as f:
+        while True:
+            lines = list(itertools.islice(f, chunk_edges))
+            if not lines:
+                return
+            with warnings.catch_warnings():
+                # a chunk of only comment/blank lines (SNAP headers) is fine
+                warnings.filterwarnings(
+                    "ignore", message=".*input contained no data.*"
+                )
+                block = np.loadtxt(
+                    lines, dtype=np.int64, comments="#", delimiter=delimiter,
+                    usecols=(0, 1), ndmin=2,
+                )
+            if block.size:
+                yield block[:, 0], block[:, 1]
+
+
+def _merge_sorted_runs(
+    runs: list[np.ndarray], block: int
+) -> Iterator[np.ndarray]:
+    """Globally sorted, deduplicated int64 blocks from sorted-unique runs.
+
+    Vectorised k-way merge: refill a bounded buffer per run, emit everything
+    up to the smallest "safe boundary" (the last loaded key of any run that
+    still has unread data - every unread key of such a run is greater), and
+    carry the remainder. Memory is ``O(len(runs) * block)``.
+    """
+    pos = [0] * len(runs)
+    bufs: list[np.ndarray] = [np.empty(0, dtype=np.int64) for _ in runs]
+    while True:
+        for i, run in enumerate(runs):
+            if bufs[i].size == 0 and pos[i] < run.shape[0]:
+                take = min(block, run.shape[0] - pos[i])
+                bufs[i] = np.asarray(run[pos[i] : pos[i] + take], dtype=np.int64)
+                pos[i] += take
+        active = [i for i in range(len(runs)) if bufs[i].size]
+        if not active:
+            return
+        unread = [i for i in active if pos[i] < runs[i].shape[0]]
+        if unread:
+            bound = min(int(bufs[i][-1]) for i in unread)
+        else:
+            bound = max(int(bufs[i][-1]) for i in active)
+        parts = []
+        for i in active:
+            cut = int(np.searchsorted(bufs[i], bound, side="right"))
+            if cut:
+                parts.append(bufs[i][:cut])
+                bufs[i] = bufs[i][cut:]
+        merged = parts[0] if len(parts) == 1 else np.concatenate(parts)
+        out = np.unique(merged)  # runs are unique; cross-run dupes collapse here
+        if out.size:
+            yield out
+
+
+def convert_edge_list(
+    src_path: str | os.PathLike,
+    out_path: str | os.PathLike,
+    *,
+    num_vertices: int | None = None,
+    chunk_edges: int = 1 << 22,
+    merge_block: int = 1 << 20,
+    delimiter: str | None = None,
+    tmp_dir: str | None = None,
+) -> dict:
+    """Two-pass, bounded-memory edge-list -> on-disk CSR conversion.
+
+    Semantics match ``CSRGraph.from_edges(edges, num_vertices)`` exactly:
+    self-loops dropped, duplicate edges (either direction) deduplicated,
+    symmetric storage, each adjacency row sorted ascending - so
+    ``ExternalCSRGraph(out_path)`` is bit-identical to the in-memory build.
+
+    Returns a stats dict (``num_vertices``, ``num_edges``, ``input_edges``,
+    ``runs``, ``file_bytes``).
+    """
+    src_path = os.fspath(src_path)
+    out_path = os.fspath(out_path)
+    chunk_edges = max(int(chunk_edges), 1)
+    merge_block = max(int(merge_block), 1)
+
+    # ---- pass 1a: canonicalize chunks, spill sorted-unique key runs
+    input_edges = 0
+    max_id = -1
+    run_files: list[str] = []
+    with tempfile.TemporaryDirectory(dir=tmp_dir) as td:
+        for s, d in _iter_edge_chunks(src_path, chunk_edges, delimiter):
+            input_edges += int(s.shape[0])
+            keep = s != d  # no self loops
+            s, d = s[keep], d[keep]
+            if s.size == 0:
+                continue
+            cmin = min(int(s.min()), int(d.min()))
+            cmax = max(int(s.max()), int(d.max()))
+            if cmin < 0:
+                raise ValueError(
+                    f"{src_path!r}: negative vertex id {cmin} in edge list"
+                )
+            if cmax > int(_MAX_VERTEX_ID):
+                raise ValueError(
+                    f"{src_path!r}: vertex id {cmax} exceeds the int32 "
+                    f"index range of the on-disk format"
+                )
+            max_id = max(max_id, cmax)
+            lo = np.minimum(s, d)
+            hi = np.maximum(s, d)
+            key = np.unique((lo << np.int64(32)) | hi)
+            run = os.path.join(td, f"run{len(run_files)}.i64")
+            key.tofile(run)
+            run_files.append(run)
+            del lo, hi, key
+
+        if num_vertices is None:
+            n = max_id + 1
+        else:
+            n = int(num_vertices)
+            if max_id >= n:
+                raise ValueError(
+                    f"{src_path!r}: vertex id {max_id} >= num_vertices={n}"
+                )
+        num_runs = len(run_files)
+
+        # ---- pass 1b: merge runs -> deduped sorted edge file + degrees
+        runs = [
+            np.memmap(r, dtype=np.int64, mode="r") for r in run_files
+        ]
+        degrees = np.zeros(n, dtype=np.int64)
+        dedup_path = os.path.join(td, "edges.sorted.i64")
+        unique_edges = 0
+        with open(dedup_path, "wb") as f:
+            for block in _merge_sorted_runs(runs, merge_block):
+                lo = (block >> np.int64(32)).astype(np.int64)
+                hi = (block & np.int64(0xFFFFFFFF)).astype(np.int64)
+                degrees += np.bincount(lo, minlength=n)
+                degrees += np.bincount(hi, minlength=n)
+                block.tofile(f)
+                unique_edges += int(block.shape[0])
+        del runs
+        half = 2 * unique_edges
+
+        # ---- pass 2: scatter both edge directions into the mapped indices
+        indptr = np.zeros(n + 1, dtype=np.int64)
+        np.cumsum(degrees, out=indptr[1:])
+        indptr_off, indices_off, total = _file_layout(n, half)
+        with open(out_path, "wb") as f:
+            f.write(_pack_header(n, half))
+            indptr.astype(_INDPTR_DTYPE).tofile(f)
+            f.truncate(total)
+        cursor = indptr[:-1].copy()
+        if half:
+            indices = np.memmap(
+                out_path, dtype=_INDICES_DTYPE, mode="r+",
+                offset=indices_off, shape=(half,),
+            )
+            dedup = np.memmap(dedup_path, dtype=np.int64, mode="r")
+            for blo in range(0, unique_edges, merge_block):
+                block = np.asarray(dedup[blo : blo + merge_block])
+                lo = (block >> np.int64(32)).astype(np.int64)
+                hi = (block & np.int64(0xFFFFFFFF)).astype(np.int64)
+                # within a key-sorted block, every (u, v) contribution to a
+                # row v (u < v) precedes every (v, w) contribution (the key
+                # (u, v) sorts before (v, w)), so writing the hi side first,
+                # then the lo side, fills each row ascending - the exact
+                # per-row order CSRGraph.from_edges produces
+                order = np.argsort(hi, kind="stable")
+                indices[_grouped_positions(cursor, hi[order])] = lo[order].astype(
+                    _INDICES_DTYPE
+                )
+                indices[_grouped_positions(cursor, lo)] = hi.astype(_INDICES_DTYPE)
+            indices.flush()
+            del indices, dedup
+        if not np.array_equal(cursor, indptr[1:]):
+            raise AssertionError(
+                "internal error: adjacency rows not completely filled"
+            )
+    return {
+        "num_vertices": int(n),
+        "num_edges": int(unique_edges),
+        "input_edges": int(input_edges),
+        "runs": num_runs,
+        "file_bytes": int(total),
+    }
+
+
+def _grouped_positions(cursor: np.ndarray, grp: np.ndarray) -> np.ndarray:
+    """Write positions ``cursor[grp] + rank-within-group`` for a *sorted*
+    group-id array, advancing ``cursor`` by each group's count."""
+    m = grp.shape[0]
+    if m == 0:
+        return np.empty(0, dtype=np.int64)
+    seg_starts = np.concatenate(([0], np.flatnonzero(np.diff(grp)) + 1))
+    counts = np.diff(np.concatenate((seg_starts, [m])))
+    offsets = np.arange(m, dtype=np.int64) - np.repeat(seg_starts, counts)
+    pos = cursor[grp] + offsets
+    cursor[grp[seg_starts]] += counts
+    return pos
+
+
+# ------------------------------------------------------------ spec sources
+def validate_source(source: str) -> None:
+    """Syntax-check a ``PartitionSpec.source`` string (no filesystem I/O).
+
+    Grammar: ``rmat:<n>[:<avg_degree>]`` | ``dataset:<name>`` | a file path
+    to an on-disk graph (``.bin`` external CSR or ``.npz`` CSRGraph dump).
+    """
+    if not isinstance(source, str) or not source:
+        raise ValueError(f"source must be a non-empty string, got {source!r}")
+    if source.startswith("rmat:"):
+        fields = source.split(":")[1:]
+        if not 1 <= len(fields) <= 2:
+            raise ValueError(
+                f"bad source {source!r}: expected rmat:<n>[:<avg_degree>]"
+            )
+        try:
+            n = int(fields[0])
+            deg = float(fields[1]) if len(fields) == 2 else 16.0
+        except ValueError:
+            raise ValueError(
+                f"bad source {source!r}: expected rmat:<n>[:<avg_degree>]"
+            ) from None
+        if n < 1 or deg <= 0:
+            raise ValueError(
+                f"bad source {source!r}: n must be >= 1 and avg_degree > 0"
+            )
+        return
+    if source.startswith("dataset:"):
+        from repro.graph.generators import DATASETS
+
+        name = source.split(":", 1)[1]
+        if name not in DATASETS:
+            raise ValueError(
+                f"bad source {source!r}: unknown dataset {name!r} "
+                f"(available: {', '.join(sorted(DATASETS))})"
+            )
+        return
+    # anything else is a file path; colons are legal in POSIX paths, so no
+    # scheme guessing - a missing file fails with a clear error at load time
+
+
+def load_graph_source(source: str, *, seed: int = 0):
+    """Resolve a spec ``source`` into a graph object.
+
+    ``rmat:<n>[:<avg_degree>]`` generates a seeded R-MAT; ``dataset:<name>``
+    loads a named benchmark dataset; anything else is a path - ``.npz`` loads
+    a ``CSRGraph`` dump, everything else opens the file as a memory-mapped
+    :class:`ExternalCSRGraph`.
+    """
+    validate_source(source)
+    if source.startswith("rmat:"):
+        from repro.graph.generators import rmat_graph
+
+        fields = source.split(":")[1:]
+        n = int(fields[0])
+        deg = float(fields[1]) if len(fields) == 2 else 16.0
+        return rmat_graph(n, avg_degree=deg, seed=seed)
+    if source.startswith("dataset:"):
+        from repro.graph.generators import load_dataset
+
+        return load_dataset(source.split(":", 1)[1], seed=seed)
+    return load_graph_file(source)
+
+
+def load_graph_file(path: str):
+    """Open an on-disk graph: ``.npz`` loads a ``CSRGraph`` dump resident,
+    anything else is memory-mapped as an :class:`ExternalCSRGraph`."""
+    if path.endswith(".npz"):
+        return CSRGraph.load(path)
+    return ExternalCSRGraph(path)

@@ -10,6 +10,11 @@ cursors for the parallel engine (paper §V: "a parallel version for CUTTANA"):
 shard ``s`` sees every ``S``-th vertex of the base order, so each shard's
 substream preserves the statistical character of the full stream (a BFS order
 stays neighbourhood-coherent per shard, a random order stays random).
+
+Everything here is duck-typed over the CSR read surface, so a memory-mapped
+:class:`~repro.graph.external.ExternalCSRGraph` streams exactly like a
+resident :class:`CSRGraph` - neighbour arrays come straight off the mapped
+file.
 """
 from __future__ import annotations
 
@@ -100,9 +105,16 @@ class ShardedStream:
         return sum(shard.shape[0] for shard in self.shards)
 
     def shard_of(self, num_vertices: int) -> np.ndarray:
-        """int8/int16[num_vertices]: which shard streams each vertex (-1 if
-        the vertex is in no shard - only possible with an ``ids`` subset)."""
-        dtype = np.int8 if self.num_shards <= 127 else np.int32
+        """Which shard streams each vertex (-1 if the vertex is in no shard -
+        only possible with an ``ids`` subset). The dtype is the narrowest
+        signed integer that fits ``num_shards``: int8 up to 127 shards,
+        int16 up to 32767, int32 beyond."""
+        if self.num_shards <= np.iinfo(np.int8).max:
+            dtype = np.int8
+        elif self.num_shards <= np.iinfo(np.int16).max:
+            dtype = np.int16
+        else:
+            dtype = np.int32
         out = np.full(num_vertices, -1, dtype=dtype)
         for s, shard in enumerate(self.shards):
             out[shard] = s

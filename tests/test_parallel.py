@@ -77,6 +77,23 @@ def test_sharded_stream_rejects_bad_shard_count():
         ShardedStream.from_ids(np.arange(10), 0)
 
 
+@pytest.mark.parametrize(
+    "num_shards,expected_dtype",
+    [(1, np.int8), (127, np.int8), (128, np.int16), (200, np.int16),
+     (32767, np.int16), (32768, np.int32)],
+)
+def test_sharded_stream_shard_of_dtype(num_shards, expected_dtype):
+    # narrowest signed dtype that fits the shard count; the >127 branch used
+    # to silently fall back to int32 against the docstring's int8/int16 promise
+    n = max(num_shards * 2, 512)
+    sharded = ShardedStream.from_ids(np.arange(n, dtype=np.int64), num_shards)
+    shard_of = sharded.shard_of(n)
+    assert shard_of.dtype == np.dtype(expected_dtype)
+    for s in (0, num_shards - 1):
+        assert (shard_of[sharded.shards[s]] == s).all()
+    assert int(shard_of.max()) == num_shards - 1
+
+
 # -------------------------------------------------------- num_shards=1 parity
 @pytest.mark.parametrize("order", ORDERS)
 def test_parallel_cuttana_single_shard_bit_identical(graph, small_graph, order):
