@@ -53,6 +53,9 @@ def main() -> None:
     ap.add_argument("--latency-tolerance", type=float, default=None,
                     help="looser bound for wall-clock metrics only "
                          "(default: same as --tolerance)")
+    ap.add_argument("--tuning", default=None, metavar="OUT",
+                    help="have the scaling suite write its auto-tuning "
+                         "artifact (TUNING_partition.json) here")
     args = ap.parse_args()
 
     from repro.api.result import jsonify
@@ -77,7 +80,8 @@ def main() -> None:
             n=30_000 if not args.full else 100_000
         )),
         "scaling": _suite("scaling", lambda: dict(
-            n=20_000 if not args.full else 100_000
+            n=20_000 if not args.full else 100_000,
+            tuning_out=args.tuning,
         )),
         "outofcore": _suite("outofcore", lambda: dict(
             n=40_000 if not args.full else 125_000

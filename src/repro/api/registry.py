@@ -76,7 +76,12 @@ class CuttanaAlgoParams:
 @dataclasses.dataclass(frozen=True)
 class CuttanaParallelAlgoParams:
     """Shard-parallel CUTTANA (paper §V): ``num_shards`` interleaved shard
-    cursors with bulk-synchronous supersteps around the Algorithm 1 knobs."""
+    cursors with bulk-synchronous supersteps around the Algorithm 1 knobs.
+
+    ``num_shards=0`` (or the spec string ``"auto"``) and ``chunk=0`` resolve
+    through the auto-tuner (:mod:`repro.core.autotune`); ``max_workers`` is
+    the shard-task thread count (0 = auto, ``min(num_shards, cpu_count)``) -
+    it changes wall-clock only, never assignments."""
 
     num_shards: int = 4
     d_max: int = 1000
@@ -87,17 +92,21 @@ class CuttanaParallelAlgoParams:
     thresh: float = 0.0
     max_moves: int | None = None
     chunk: int = 512
+    max_workers: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
 class FennelParallelAlgoParams:
-    """Bulk-synchronous parallel FENNEL: ``num_shards`` shard frontiers."""
+    """Bulk-synchronous parallel FENNEL: ``num_shards`` shard frontiers.
+    ``num_shards=0``/``"auto"`` and ``chunk=0`` auto-tune; ``max_workers=0``
+    means auto."""
 
     num_shards: int = 4
     gamma: float = 1.5
     alpha_scale: float = 1.0
     hybrid: bool = True
     chunk: int = 512
+    max_workers: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -121,13 +130,15 @@ class HeiStreamAlgoParams:
 class RestreamAlgoParams:
     """Restream knobs. ``num_shards=1`` is the sequential restream;
     ``num_shards>=2`` runs every re-pass through the S-shard superstep core
-    (same parallel engine as ``cuttana-parallel``)."""
+    (same parallel engine as ``cuttana-parallel``); ``num_shards=0`` auto-
+    tunes and ``max_workers`` (0 = auto) sets the shard-task threads."""
 
     passes: int = 3
     base: str = "cuttana"
     final_refine: bool = True
     chunk: int = 512
     num_shards: int = 1
+    max_workers: int = 0
 
 
 @dataclasses.dataclass(frozen=True)

@@ -50,6 +50,14 @@ class PartitionResult:
     def is_vertex_cut(self) -> bool:
         return self.edge_partition is not None
 
+    @property
+    def profile(self) -> dict | None:
+        """Per-superstep wall-clock profile from the parallel engine
+        (``None`` for sequential algorithms): worker count, queue wait, and
+        the prep/score/place/exchange/merge phase split, plus up to 64
+        per-superstep rows. See :mod:`repro.core.profile`."""
+        return self.telemetry.get("profile")
+
     def vertex_assignment(self) -> np.ndarray:
         """A vertex->partition view usable by analytics/db localization:
         the assignment itself for edge-cut results, replica *masters* for

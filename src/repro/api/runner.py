@@ -47,6 +47,12 @@ def partition(
     case the graph is resolved from ``spec.source`` (``rmat:*``,
     ``dataset:*``, or an on-disk graph path). A spec with a source can also
     be passed alone: ``partition(spec)``.
+
+    Parallel algorithms additionally surface ``telemetry["profile"]`` (the
+    per-superstep phase timings, see ``PartitionResult.profile``) and, when
+    ``num_shards=0``/``"auto"`` or ``chunk=0`` was requested,
+    ``telemetry["autotune"]`` recording the resolved knobs and their source
+    (tuning artifact vs heuristic).
     """
     if spec is None and isinstance(graph, (PartitionSpec, dict, str)):
         # partition(spec_with_source) convenience form

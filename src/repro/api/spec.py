@@ -159,6 +159,10 @@ def _normalize_params(info: PartitionerInfo, params: Any):
                 f"unknown {info.name!r} params {sorted(unknown)}; "
                 f"valid fields: {sorted(valid)}"
             )
+        if params.get("num_shards") == "auto":
+            # spec sugar for the auto-tuned shard count; 0 is the canonical
+            # (JSON-round-trippable, type-checked) encoding
+            params = {**params, "num_shards": 0}
         return _check_param_types(info, cls(**params))
     raise ValueError(
         f"params for {info.name!r} must be a dict or {cls.__name__}, "
@@ -199,10 +203,25 @@ def _check_param_types(info: PartitionerInfo, block: Any):
                 f"{info.name!r} param {field.name!r} must be {ann}, "
                 f"got {type(value).__name__} {value!r}"
             )
-        if field.name == "num_shards" and value < 1:
-            # the sharded engines need at least one shard cursor; fail at
+        if field.name == "num_shards" and value < 0:
+            # 0 (spec sugar: "auto") resolves through the tuning artifact at
+            # run time; anything negative is always a caller error - fail at
             # spec construction, not mid-stream
             raise ValueError(
-                f"{info.name!r} param 'num_shards' must be >= 1, got {value!r}"
+                f"{info.name!r} param 'num_shards' must be >= 1, "
+                f"or 0/'auto' for the tuned shard count, got {value!r}"
             )
+        if field.name == "max_workers" and value < 0:
+            raise ValueError(
+                f"{info.name!r} param 'max_workers' must be >= 0 "
+                f"(0 = one thread per shard up to cpu_count), got {value!r}"
+            )
+        if field.name == "chunk":
+            auto_ok = info.name in ("cuttana-parallel", "fennel-parallel")
+            if value < (0 if auto_ok else 1):
+                hint = " or 0 for the tuned chunk size" if auto_ok else ""
+                raise ValueError(
+                    f"{info.name!r} param 'chunk' must be >= 1{hint}, "
+                    f"got {value!r}"
+                )
     return block

@@ -53,12 +53,15 @@ it touches, but nothing here may copy ``indices`` wholesale.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Protocol, runtime_checkable
 
 import numpy as np
 
 from repro.core.base import FennelParams, PartitionState
 from repro.core.buffer import PriorityBuffer
+from repro.core.executor import ShardPool
+from repro.core.profile import SuperstepProfiler
 from repro.core.subpartition import SubPartitioner
 from repro.graph.csr import CSRGraph
 from repro.graph.stream import ShardedStream, stream_order
@@ -178,6 +181,17 @@ class FennelScorer:
             size = 0.0
         return None, -(self._ag * size**self._gm1)
 
+    def affine_arrays(self, v_counts, e_counts):
+        """Vectorised :meth:`affine_update`: ``(mul, add)`` for a whole load
+        view at once (``mul`` None => 1). Elementwise over any shape, and the
+        same libm ``pow`` as the scalar path. Stateless - safe to call from
+        concurrent shard tasks."""
+        if self.hybrid:
+            size = 0.5 * (v_counts + self.mu * e_counts)
+        else:
+            size = np.asarray(v_counts, dtype=np.float64)
+        return None, -(self._ag * np.power(np.maximum(size, 0.0), self._gm1))
+
 
 class LDGScorer:
     """Linear Deterministic Greedy: ``hist_i * max(1 - size_i/C, 0)`` with a
@@ -229,6 +243,17 @@ class LDGScorer:
             f = 0.0
         return f, -(1e-9 * lp)
 
+    def affine_arrays(self, v_counts, e_counts):
+        """Vectorised :meth:`affine_update` (see FennelScorer): stateless,
+        elementwise, including the nan path for edgeless edge-mode graphs."""
+        loads = np.asarray(
+            v_counts if self.balance_mode == "vertex" else e_counts,
+            dtype=np.float64,
+        )
+        if self._cap == 0.0:
+            return np.full_like(loads, np.nan), -(1e-9 * loads)
+        return np.maximum(1.0 - loads / self._cap, 0.0), -(1e-9 * loads)
+
 
 # ------------------------------------------------------------------- config
 @dataclasses.dataclass(frozen=True)
@@ -238,13 +263,22 @@ class EngineConfig:
     ``exact=True``: in-chunk histogram corrections, no sampling - results
     match the sequential per-vertex loops bit-for-bit. ``exact=False``:
     histograms stale by one chunk, degree-capped sampling above
-    ``sample_cap`` (only honoured in this mode)."""
+    ``sample_cap`` (only honoured in this mode).
+
+    ``max_workers`` threads run the sharded policies' per-shard superstep
+    tasks (``None``/``0`` = auto: ``min(num_shards, cpu_count)``); results
+    are bit-identical for every worker count because shard tasks write
+    disjoint buffers. ``wave`` is the vectorised placement width inside a
+    shard task: candidates are scored ``wave`` at a time against a frozen
+    penalty/histogram view, refreshed exactly between waves."""
 
     chunk: int = 512
     sample_cap: int = 512
     exact: bool = True
     use_pallas: bool | None = None
     interpret: bool = False
+    max_workers: int | None = None
+    wave: int = 128
 
 
 # ----------------------------------------------------------------- policies
@@ -524,26 +558,81 @@ def _check_num_shards(num_shards) -> int:
     return s
 
 
+@dataclasses.dataclass
+class _ShardPrep:
+    """Frontier expansion for one shard's superstep batch.
+
+    Everything here is derived from the immutable CSR plus the batch ids
+    alone - no dependence on the evolving assignment - so preps can be (and
+    are) computed on worker threads one superstep AHEAD of their use,
+    overlapping superstep t's boundary exchange with t+1's expansion.
+    """
+
+    batch: np.ndarray  # int64[c] candidate ids (contiguous)
+    degs: np.ndarray  # int64[c]
+    rows: np.ndarray  # int64[nnz] local row index per neighbour slot
+    idx_in_row: np.ndarray  # int64[nnz]
+    cols: np.ndarray  # int64[nnz] neighbour ids
+    corr_src: np.ndarray  # int64[nc] in-shard same-superstep pairs sorted by
+    corr_dst: np.ndarray  # src; dst is placed later than src in shard order
+
+
+def _prepare_shard(indptr, indices, batch) -> _ShardPrep:
+    """Build one shard's :class:`_ShardPrep`. Stateless (the old shared
+    scratch-array correction pass would race across threads) and touches the
+    graph only through the CSR read surface."""
+    batch = np.ascontiguousarray(batch, dtype=np.int64)
+    degs = (indptr[batch + 1] - indptr[batch]).astype(np.int64)
+    rows, idx_in_row, cols = _expand_csr_batch(indptr, indices, batch, degs)
+    if cols.size:
+        # in-shard same-superstep correction pairs via sorted membership
+        # lookup: position of each neighbour id inside the batch, if any
+        order = np.argsort(batch, kind="stable")
+        sb = batch[order]
+        loc = np.searchsorted(sb, cols)
+        np.minimum(loc, sb.size - 1, out=loc)
+        cpos = np.where(sb[loc] == cols, order[loc], -1)
+        emask = (cpos >= 0) & (cpos < rows)
+        src, dst = cpos[emask], rows[emask]
+        o = np.argsort(src, kind="stable")
+        src, dst = src[o], dst[o]
+    else:
+        src = dst = np.empty(0, dtype=np.int64)
+    return _ShardPrep(batch, degs, rows, idx_in_row, cols, src, dst)
+
+
 class _SuperstepRunner:
     """Bulk-synchronous superstep core shared by the sharded policies.
 
     Per superstep, every shard's candidate vertices are scored against the
-    *superstep-start snapshot* of the shared :class:`PartitionState` in ONE
-    packed :func:`fennel_scores_sharded` kernel call (leading shard batch
-    dimension), then each shard places its candidates against a local view
-    (snapshot + its own deltas, with the remaining per-partition capacity
-    split evenly across shards). Assignments and loads are exchanged only at
-    the superstep boundary - the paper's relaxed-consistency parallel design.
-    Same-shard same-superstep neighbours are corrected exactly (the stream
-    engine's in-chunk correction); cross-shard ones are not, and are counted
-    as ``boundary_conflicts`` for the merge + coarsen + refine pass to
+    *superstep-start snapshot* of the shared :class:`PartitionState`, then
+    each shard places its candidates against a local view (snapshot + its
+    own deltas, with the remaining per-partition capacity split evenly
+    across shards). Assignments and loads are exchanged only at the
+    superstep boundary - the paper's relaxed-consistency parallel design.
+    Same-shard same-superstep neighbours are corrected exactly between
+    placement waves; cross-shard ones are not, and are counted as
+    ``boundary_conflicts`` for the merge + coarsen + refine pass to
     reconcile.
+
+    Concurrency model: each shard is one task on a :class:`ShardPool`. A
+    task reads only snapshot arrays (``part_of``, the superstep-start load
+    vectors) and its own :class:`_ShardPrep`, and writes only its disjoint
+    slices of the superstep's assignment/histogram buffers - tasks commute,
+    so assignments are bit-identical for every ``max_workers``. The merge
+    back into shared state is a vectorised bincount reduction on the main
+    thread; the sub-partition merge is a FIFO-chained pool task that may
+    overlap the next superstep's scoring.
     """
 
     def __init__(
-        self, eng: "StreamEngine", sharded: ShardedStream, reassign: bool = False
+        self,
+        eng: "StreamEngine",
+        sharded: ShardedStream,
+        reassign: bool = False,
+        need_cols: bool = False,
     ):
-        if not hasattr(eng.scorer, "affine"):
+        if not hasattr(eng.scorer, "affine_arrays"):
             raise ValueError(
                 "sharded policies require a scorer with the affine contract "
                 "(scores == hist * mul + add); got "
@@ -555,6 +644,7 @@ class _SuperstepRunner:
         self.eng = eng
         self.sharded = sharded
         self.reassign = reassign
+        self.need_cols = need_cols
         state = eng.state
         self.k = state.k
         self.shard_of = sharded.shard_of(eng.graph.num_vertices)
@@ -566,37 +656,77 @@ class _SuperstepRunner:
         self.cap = (
             state.vertex_capacity if self.vertex_mode else state.edge_capacity
         )
+        self.wave = max(int(eng.config.wave), 1)
+        self.pool = ShardPool(eng.config.max_workers, sharded.num_shards)
+        self.profile = SuperstepProfiler(workers=self.pool.workers)
+        self._subp_chain = None
+        self._v0: np.ndarray | None = None
+        self._e0: np.ndarray | None = None
+
+    def close(self) -> None:
+        """Flush the chained sub-partition merges and stop the pool. Must
+        run before anything reads ``eng.subp`` state (phase 2)."""
+        if self._subp_chain is not None:
+            t0 = time.perf_counter()
+            self._subp_chain.result()
+            self.profile.add("merge", time.perf_counter() - t0)
+            self._subp_chain = None
+        self.pool.shutdown()
+
+    # ----------------------------------------------------------- prefetch
+    def prepare_async(self, batches: list[np.ndarray]) -> list:
+        """Submit per-shard frontier expansion; futures align with shards."""
+        indptr, indices = self.eng.graph.indptr, self.eng.graph.indices
+        return [
+            self.pool.submit(_prepare_shard, indptr, indices, b)
+            if b.shape[0]
+            else None
+            for b in batches
+        ]
+
+    def wait_preps(self, futs: list | None) -> list[_ShardPrep | None] | None:
+        if futs is None:
+            return None
+        t0 = time.perf_counter()
+        preps = [f.result() if f is not None else None for f in futs]
+        self.profile.add("prep", time.perf_counter() - t0)
+        return preps
 
     # -------------------------------------------------------- histogramming
-    def _histograms(self, big, degs, rows, cols, idx_in_row, counts):
-        """float64[sum(counts), K] assigned-neighbour histograms vs the
-        snapshot, via one sharded kernel call (or its flat host companion)."""
+    def _histograms_packed(self, preps, counts, total):
+        """float64[total, K] histograms via ONE packed sharded kernel call
+        (TPU / interpret path; the host path histograms inside shard tasks
+        with :func:`neighbor_histograms_host` instead)."""
         eng = self.eng
         k = self.k
-        total = big.shape[0]
-        eng.telemetry["kernel_calls"] += 1
         part_of = eng.state.part_of
-        if not eng._use_kernel:
-            return neighbor_histograms_host(rows, part_of[cols], total, k)
         indptr, indices = eng.graph.indptr, eng.graph.indices
         num_shards = len(counts)
         cmax = max(max(counts), 1)
-        max_deg = int(degs.max()) if total else 0
+        max_deg = max(
+            (int(p.degs.max()) for p in preps if p is not None and p.degs.size),
+            default=0,
+        )
         kw = max(min(max_deg, _EXACT_KERNEL_WIDTH), 1)
-        over = np.flatnonzero(degs > kw)
         width = max(8, 1 << (kw - 1).bit_length())
         bounds = np.cumsum(np.asarray(counts, dtype=np.int64))
         starts = bounds - np.asarray(counts, dtype=np.int64)
-        row_shard = np.searchsorted(bounds, rows, side="right")
-        local_rows = rows - starts[row_shard]
         nbr3 = np.full((num_shards, cmax, width), -1, dtype=np.int32)
-        if over.size:
-            fmask = (degs <= kw)[rows]
-            nbr3[row_shard[fmask], local_rows[fmask], idx_in_row[fmask]] = (
-                part_of[cols[fmask]]
-            )
-        else:
-            nbr3[row_shard, local_rows, idx_in_row] = part_of[cols]
+        over_rows: list[tuple[int, int]] = []
+        for s, prep in enumerate(preps):
+            if prep is None:
+                continue
+            over = np.flatnonzero(prep.degs > kw)
+            if over.size:
+                fmask = (prep.degs <= kw)[prep.rows]
+                nbr3[s, prep.rows[fmask], prep.idx_in_row[fmask]] = (
+                    part_of[prep.cols[fmask]]
+                )
+                over_rows.extend(
+                    (int(starts[s] + i), int(prep.batch[i])) for i in over
+                )
+            else:
+                nbr3[s, prep.rows, prep.idx_in_row] = part_of[prep.cols]
         out = np.asarray(
             fennel_scores_sharded(
                 nbr3, np.zeros((num_shards, k), dtype=np.float32), 0.0, 1.5,
@@ -608,19 +738,161 @@ class _SuperstepRunner:
         for s, c in enumerate(counts):
             if c:
                 hist[starts[s] : bounds[s]] = out[s, :c]
-        for i in over.tolist():
-            v = int(big[i])
+        for gi, v in over_rows:
+            # over-width hubs: exact host histogram (Thm. 1 regime)
             nbp = part_of[indices[indptr[v] : indptr[v + 1]]]
-            hist[i] = np.bincount(nbp[nbp >= 0], minlength=k)
+            hist[gi] = np.bincount(nbp[nbp >= 0], minlength=k)
         return hist
 
+    # ------------------------------------------------------- per-shard task
+    def _shard_task(self, prep: _ShardPrep, hist_rows, out, room):
+        """One shard's superstep work: histogram (host path) + wave-
+        vectorised placement. Reads only snapshot arrays and ``prep``;
+        writes only this shard's ``hist_rows``/``out`` slices - safe and
+        deterministic under any pool scheduling."""
+        t0 = time.perf_counter()
+        part_of = self.eng.state.part_of
+        if hist_rows is None:
+            hist_rows = neighbor_histograms_host(
+                prep.rows, part_of[prep.cols], prep.batch.shape[0], self.k
+            )
+        old = part_of[prep.batch].astype(np.int64) if self.reassign else None
+        t1 = time.perf_counter()
+        self._place_shard(prep, hist_rows, out, room, old)
+        t2 = time.perf_counter()
+        return t1 - t0, t2 - t1, old
+
+    def _place_shard(self, prep, hist, out, room, old):
+        """Wave-vectorised placement of one shard's candidates.
+
+        ``wave`` candidates are scored at a time against the superstep
+        snapshot plus this shard's own running deltas: within a wave the
+        balance penalty and in-shard neighbour histograms are frozen (the
+        relaxation the supersteps already make across shards, one level
+        down); between waves both are refreshed exactly. A wave whose picks
+        would overshoot a partition's shard-local headroom is replayed per
+        vertex against live loads (rare - caught by the bincount projection
+        below), so the capacity rule is enforced exactly as sequentially.
+        Ties break to the lowest partition index - deterministic without
+        consuming shared rng state, which is what makes assignments
+        independent of the worker count.
+        """
+        k = self.k
+        scorer = self.eng.scorer
+        c = prep.batch.shape[0]
+        degf = prep.degs.astype(np.float64)
+        inc = np.ones(c, dtype=np.float64) if self.vertex_mode else degf
+        v_loc = self._v0.copy()
+        e_loc = self._e0.copy()
+        used = np.zeros(k, dtype=np.float64)
+        wave = self.wave
+        csrc, cdst = prep.corr_src, prep.corr_dst
+        for g0 in range(0, c, wave):
+            g1 = min(g0 + wave, c)
+            g = g1 - g0
+            rows_i = np.arange(g)
+            hb = hist[g0:g1]
+            mul, add = scorer.affine_arrays(v_loc, e_loc)
+            sc = hb + add if mul is None else hb * mul + add
+            incw = inc[g0:g1]
+            fits = used + incw[:, None] <= room
+            cur = None
+            if old is not None:
+                # pull each candidate out of its current partition in its
+                # own row's view: staying put is always allowed, and cur's
+                # penalty reflects the vertex's removal (sequential rule)
+                cur = old[g0:g1]
+                fits[rows_i, cur] = True
+                smul, sadd = scorer.affine_arrays(
+                    v_loc[cur] - 1.0, e_loc[cur] - degf[g0:g1]
+                )
+                own = hb[rows_i, cur]
+                sc[rows_i, cur] = own + sadd if smul is None else own * smul + sadd
+            masked = np.where(fits, sc, -np.inf)
+            choice = masked.argmax(axis=1).astype(np.int64)
+            best = masked[rows_i, choice]
+            fallback = ~(best > -np.inf)  # -inf (or nan): headroom exhausted
+            if fallback.any():
+                loads_loc = v_loc if self.vertex_mode else e_loc
+                choice[fallback] = int(loads_loc.argmin())
+            add_w = np.bincount(choice, weights=incw, minlength=k)
+            proj = used + add_w
+            if cur is not None:
+                proj = proj - np.bincount(cur, weights=incw, minlength=k)
+            repaired = False
+            if (proj > room).any():
+                nf = np.flatnonzero(~fallback)
+                # fallback-only overshoot mirrors the sequential fallback
+                # (capacity is advisory there); real picks must not overshoot
+                if nf.size and (proj > room)[choice[nf]].any():
+                    repaired = True
+                    self._repair_wave(
+                        g0, g1, sc, incw, degf, room, used, v_loc, e_loc,
+                        choice, cur,
+                    )
+            if not repaired:
+                used += add_w
+                v_loc += np.bincount(choice, minlength=k).astype(np.float64)
+                e_loc += np.bincount(choice, weights=degf[g0:g1], minlength=k)
+                if cur is not None:
+                    used -= np.bincount(cur, weights=incw, minlength=k)
+                    v_loc -= np.bincount(cur, minlength=k).astype(np.float64)
+                    e_loc -= np.bincount(cur, weights=degf[g0:g1], minlength=k)
+            out[g0:g1] = choice
+            if csrc.size:
+                lo = np.searchsorted(csrc, g0)
+                hi = np.searchsorted(csrc, g1)
+                if hi > lo:
+                    d_ = cdst[lo:hi]
+                    later = d_ >= g1
+                    if later.any():
+                        d_ = d_[later]
+                        s_ = csrc[lo:hi][later] - g0
+                        np.add.at(hist, (d_, choice[s_]), 1.0)
+                        if cur is not None:
+                            np.add.at(hist, (d_, cur[s_]), -1.0)
+
+    def _repair_wave(
+        self, g0, g1, sc, incw, degf, room, used, v_loc, e_loc, choice, cur
+    ):
+        """Scalar replay of one wave against live shard-local loads (frozen
+        wave scores): only runs when the vectorised projection would
+        overshoot, so the balance invariant is exactly the sequential one."""
+        vertex_mode = self.vertex_mode
+        for i in range(g1 - g0):
+            inc_i = incw[i]
+            f_i = used + inc_i <= room
+            if cur is not None:
+                f_i[cur[i]] = True
+            m = np.where(f_i, sc[i], -np.inf)
+            b = m.max()
+            if b > -np.inf:
+                p = int(m.argmax())
+            else:
+                p = int((v_loc if vertex_mode else e_loc).argmin())
+            choice[i] = p
+            d = degf[g0 + i]
+            used[p] += inc_i
+            v_loc[p] += 1.0
+            e_loc[p] += d
+            if cur is not None:
+                q = cur[i]
+                used[q] -= inc_i
+                v_loc[q] -= 1.0
+                e_loc[q] -= d
+
     # ----------------------------------------------------------- superstep
-    def run_superstep(self, batches: list[np.ndarray]) -> np.ndarray | None:
-        """Score + place all shards' candidates, commit at the boundary.
+    def run_superstep(
+        self,
+        batches: list[np.ndarray],
+        preps: list[_ShardPrep | None] | None = None,
+    ) -> np.ndarray | None:
+        """Score + place all shards' candidates concurrently, commit at the
+        boundary via a vectorised reduction.
 
         Returns the flat neighbour-id array of everything placed (the
-        buffered policy notifies every shard buffer with it), or None when
-        the superstep had no candidates.
+        buffered policy notifies every shard buffer with it; only built
+        when ``need_cols``), or None when the superstep had no candidates.
         """
         eng = self.eng
         state = eng.state
@@ -629,17 +901,10 @@ class _SuperstepRunner:
         total = sum(counts)
         if total == 0:
             return None
-        graph = eng.graph
-        indptr, indices = graph.indptr, graph.indices
+        if preps is None:
+            preps = self.wait_preps(self.prepare_async(batches))
+        eng.telemetry["kernel_calls"] += 1
         k = self.k
-        big = np.concatenate([np.asarray(b, dtype=np.int64) for b in batches])
-        degs = (indptr[big + 1] - indptr[big]).astype(np.int64)
-        rows, idx_in_row, cols = _expand_csr_batch(indptr, indices, big, degs)
-        hist = self._histograms(big, degs, rows, cols, idx_in_row, counts)
-
-        scorer = eng.scorer
-        subp = eng.subp
-        rng = state.rng
         v_counts, e_counts = state.v_counts, state.e_counts
         loads0 = v_counts if self.vertex_mode else e_counts
         # remaining per-partition capacity split evenly across the shards
@@ -649,134 +914,100 @@ class _SuperstepRunner:
         # sequential least-loaded fallback already can
         active = sum(1 for c in counts if c)
         room = np.maximum(self.cap - loads0, 0.0) / active
-        room_l = room.tolist()
-        reassign = self.reassign
-        old_flat = state.part_of[big].copy() if reassign else None
-        mul_a, add_a = scorer.affine(state)  # snapshot penalty (state untouched)
-        nbr_views = (
-            [indices[indptr[v] : indptr[v + 1]] for v in big.tolist()]
-            if subp is not None
-            else None
-        )
-        assigned_flat = np.empty(total, dtype=np.int64)
-        neg_inf = float("-inf")
-        krange = range(k)
-        vertex_mode = self.vertex_mode
-        sc = [neg_inf] * k
-        # nnz slice per shard (rows is sorted ascending)
+        self._v0 = v_counts.copy()
+        self._e0 = e_counts.copy()
         bounds = np.cumsum(np.asarray(counts, dtype=np.int64))
-        nnz_edges = np.searchsorted(rows, np.concatenate(([0], bounds)))
-        row_lo = 0
-        for s, batch in enumerate(batches):
-            c = counts[s]
-            if c == 0:
+        starts = bounds - np.asarray(counts, dtype=np.int64)
+        assigned_flat = np.empty(total, dtype=np.int64)
+        hist_all = None
+        score_s = 0.0
+        if eng._use_kernel:
+            t_k = time.perf_counter()
+            hist_all = self._histograms_packed(preps, counts, total)
+            score_s += time.perf_counter() - t_k
+        # fan out: one task per non-empty shard, each writing its disjoint
+        # slice of assigned_flat (and mutating only its own hist rows)
+        t_par = time.perf_counter()
+        futs = []
+        for s, prep in enumerate(preps):
+            if prep is None:
                 continue
-            a, b_ = nnz_edges[s], nnz_edges[s + 1]
-            corr = eng._inchunk_corr(
-                np.asarray(batch, dtype=np.int64), rows[a:b_] - row_lo, cols[a:b_]
+            hist_rows = (
+                hist_all[starts[s] : bounds[s]] if hist_all is not None else None
             )
-            H = hist[row_lo : row_lo + c].tolist()
-            bl = np.asarray(batch).tolist()
-            dl = degs[row_lo : row_lo + c].tolist()
-            # shard-local view: snapshot loads + own deltas, snapshot penalty
-            mul = None if mul_a is None else mul_a.tolist()
-            add = add_a.tolist()
-            v_list = v_counts.tolist()
-            e_list = e_counts.tolist()
-            load = v_list if vertex_mode else e_list
-            used = [0.0] * k
-            out = assigned_flat[row_lo : row_lo + c]
-            for i in range(c):
-                v, deg = bl[i], dl[i]
-                inc = 1 if vertex_mode else deg
-                cur = -1
-                if reassign:
-                    # pull v out of its current partition in the local view;
-                    # staying put is always allowed (mirrors the sequential
-                    # reassign rule `p != cur` in the capacity check)
-                    cur = int(old_flat[row_lo + i])
-                    v_list[cur] -= 1
-                    e_list[cur] -= deg
-                    used[cur] -= inc
-                    u = scorer.affine_update(v_list[cur], e_list[cur])
-                    if mul is not None:
-                        mul[cur] = u[0]
-                    add[cur] = u[1]
-                row = H[i]
-                best = neg_inf
-                if mul is None:
-                    for p in krange:
-                        if used[p] + inc > room_l[p] and p != cur:
-                            sc[p] = neg_inf
-                            continue
-                        s_ = row[p] + add[p]
-                        sc[p] = s_
-                        if s_ > best:
-                            best = s_
-                else:
-                    for p in krange:
-                        if used[p] + inc > room_l[p] and p != cur:
-                            sc[p] = neg_inf
-                            continue
-                        s_ = row[p] * mul[p] + add[p]
-                        sc[p] = s_
-                        if s_ > best:
-                            best = s_
-                if best == neg_inf:
-                    # shard headroom exhausted everywhere - least loaded by
-                    # the local view, same rule as the sequential fallback
-                    p = load.index(min(load))
-                else:
-                    thr = best - 1e-12
-                    ties = [p for p in krange if sc[p] >= thr]
-                    p = ties[0] if len(ties) == 1 else int(ties[rng.integers(len(ties))])
-                out[i] = p
-                v_list[p] += 1
-                e_list[p] += deg
-                used[p] += inc
-                u = scorer.affine_update(v_list[p], e_list[p])
-                if mul is not None:
-                    mul[p] = u[0]
-                add[p] = u[1]
-                if subp is not None:
-                    subp.assign(v, p, nbr_views[row_lo + i], deg)
-                if corr is not None and p != cur:
-                    dst, starts = corr
-                    if reassign:
-                        for j in dst[starts[i] : starts[i + 1]]:
-                            rj = H[j]
-                            rj[cur] -= 1.0
-                            rj[p] += 1.0
-                    else:
-                        for j in dst[starts[i] : starts[i + 1]]:
-                            H[j][p] += 1.0
-            row_lo += c
-        # ---------------------------------------------- boundary exchange
-        if reassign:
+            futs.append(
+                self.pool.submit(
+                    self._shard_task, prep, hist_rows,
+                    assigned_flat[starts[s] : bounds[s]], room,
+                )
+            )
+        place_s = 0.0
+        olds = []
+        for f in futs:
+            h_s, p_s, old = f.result()
+            score_s += h_s
+            place_s += p_s
+            if old is not None:
+                olds.append(old)
+        parallel_wall = time.perf_counter() - t_par
+        # ------------------------------------------------ boundary exchange
+        t_x = time.perf_counter()
+        live = [p for p in preps if p is not None]
+        big = np.concatenate([p.batch for p in live])
+        degf = np.concatenate([p.degs for p in live]).astype(np.float64)
+        if self.reassign:
+            old_flat = np.concatenate(olds)
             v_counts -= np.bincount(old_flat, minlength=k).astype(np.float64)
-            e_counts -= np.bincount(
-                old_flat, weights=degs.astype(np.float64), minlength=k
-            )
+            e_counts -= np.bincount(old_flat, weights=degf, minlength=k)
         state.part_of[big] = assigned_flat
         v_counts += np.bincount(assigned_flat, minlength=k).astype(np.float64)
-        e_counts += np.bincount(
-            assigned_flat, weights=degs.astype(np.float64), minlength=k
-        )
+        e_counts += np.bincount(assigned_flat, weights=degf, minlength=k)
         self.sync_rounds += 1
         self.step_mark[big] = self.step
-        if cols.size:
-            same_step = self.step_mark[cols] == self.step
-            cross = same_step & (self.shard_of[cols] != self.shard_of[big[rows]])
-            # each conflicting edge appears once from either endpoint
-            self.boundary_conflicts += int(cross.sum()) // 2
-        return cols
+        conflicts = 0
+        for s, prep in enumerate(preps):
+            if prep is None or prep.cols.size == 0:
+                continue
+            same_step = self.step_mark[prep.cols] == self.step
+            conflicts += int((same_step & (self.shard_of[prep.cols] != s)).sum())
+        # each conflicting edge appears once from either endpoint
+        self.boundary_conflicts += conflicts // 2
+        exchange_s = time.perf_counter() - t_x
+        # ----------------------------------- overlapped sub-partition merge
+        merge_s = 0.0
+        if eng.subp is not None:
+            t_m = time.perf_counter()
+            rows_g = np.concatenate(
+                [p.rows + starts[s] for s, p in enumerate(preps) if p is not None]
+            )
+            cols_g = np.concatenate([p.cols for p in live])
+            degs_g = np.concatenate([p.degs for p in live])
+            # FIFO-chained: superstep t's sub-placement may overlap t+1's
+            # scoring (placement never reads sub-partition state), but
+            # merges apply in superstep order and close() flushes the chain
+            # before phase 2 reads it
+            self._subp_chain = self.pool.submit_after(
+                self._subp_chain, eng.subp.assign_superstep,
+                big, assigned_flat, degs_g, rows_g, cols_g, self.wave,
+            )
+            merge_s = time.perf_counter() - t_m
+        self.profile.record(
+            score=score_s, place=place_s, exchange=exchange_s, merge=merge_s,
+            parallel_wall=parallel_wall,
+        )
+        if self.need_cols:
+            return np.concatenate([p.cols for p in live])
+        return big
 
     def finalize_telemetry(self) -> None:
+        self.profile.add_queue_wait(self.pool.queue_wait_s)
         self.eng.telemetry.update(
             supersteps=self.step,
             sync_rounds=self.sync_rounds,
             boundary_conflicts=self.boundary_conflicts,
             num_shards=self.sharded.num_shards,
+            max_workers=self.pool.workers,
+            profile=self.profile.to_dict(),
         )
 
 
@@ -809,8 +1040,21 @@ class ShardedImmediatePolicy:
             return
         sharded = ShardedStream.from_ids(eng.ids, self.num_shards)
         runner = _SuperstepRunner(eng, sharded, reassign=self.reassign)
-        for batches in sharded.superstep_batches(eng.config.chunk):
-            runner.run_superstep(batches)
+        try:
+            steps = list(sharded.superstep_batches(eng.config.chunk))
+            prefetched = runner.prepare_async(steps[0]) if steps else None
+            for t, batches in enumerate(steps):
+                preps = runner.wait_preps(prefetched)
+                # overlap: expand superstep t+1's frontier while t scores,
+                # places and merges (expansion reads only the immutable CSR)
+                prefetched = (
+                    runner.prepare_async(steps[t + 1])
+                    if t + 1 < len(steps)
+                    else None
+                )
+                runner.run_superstep(batches, preps)
+        finally:
+            runner.close()
         runner.finalize_telemetry()
 
 
@@ -851,7 +1095,7 @@ class ShardedBufferedPolicy:
         indptr, indices = graph.indptr, graph.indices
         part_of = eng.state.part_of
         sharded = ShardedStream.from_ids(eng.ids, num_shards)
-        runner = _SuperstepRunner(eng, sharded)
+        runner = _SuperstepRunner(eng, sharded, need_cols=True)
         chunk = max(int(eng.config.chunk), 1)
         bufs = [
             PriorityBuffer(self.max_qsize, self.d_max, self.theta, graph=graph)
@@ -861,74 +1105,108 @@ class ShardedBufferedPolicy:
         pending: list[list[int]] = [[] for _ in range(num_shards)]
         cursors = [0] * num_shards
         d_max = self.d_max
-        evictions = drained = bypass = peak = 0
-        while True:
-            batches: list[np.ndarray] = []
-            for s in range(num_shards):
-                cand = pending[s]
-                pending[s] = []
-                shard = sharded.shards[s]
-                buf = bufs[s]
-                take = shard[cursors[s] : cursors[s] + chunk]
-                cursors[s] += take.shape[0]
-                if take.shape[0]:
-                    tdegs = (indptr[take + 1] - indptr[take]).astype(np.int64)
-                    trows, _, tcols = _expand_csr_batch(
-                        indptr, indices, take, tdegs
-                    )
-                    asg = np.bincount(
-                        trows[part_of[tcols] != -1], minlength=take.shape[0]
-                    )
-                    byp = tdegs >= d_max
-                    comp = (~byp) & (asg == tdegs) & (tdegs > 0)
-                    tl = take.tolist()
-                    al = asg.tolist()
-                    bypl = byp.tolist()
-                    compl = comp.tolist()
-                    for i in range(len(tl)):
-                        if bypl[i]:
-                            bypass += 1
-                            cand.append(tl[i])
-                        elif compl[i]:
-                            cand.append(tl[i])
-                        else:
-                            buf.push(tl[i], None, al[i])
-                    if len(buf) > peak:
-                        peak = len(buf)
-                    while buf.full:
-                        u, _ = buf.pop_best()
-                        evictions += 1
-                        cand.append(u)
-                elif len(buf):
-                    # cursor exhausted: drain the buffer in score order,
-                    # chunk candidates per superstep
-                    for _ in range(max(chunk - len(cand), 0)):
-                        if not len(buf):
-                            break
-                        u, _ = buf.pop_best()
-                        drained += 1
-                        cand.append(u)
-                batches.append(np.asarray(cand, dtype=np.int64))
-            if all(b.shape[0] == 0 for b in batches):
-                exhausted = all(
-                    cursors[s] >= sharded.shards[s].shape[0]
-                    for s in range(num_shards)
+
+        def ingest(s: int):
+            """One shard's superstep ingest: admission scan + buffer churn.
+            Touches only shard s's buffer/pending/cursor slots and reads the
+            boundary-stable ``part_of``, so all S ingests run concurrently;
+            per-shard counters come back for a deterministic main-thread sum.
+            """
+            cand = pending[s]
+            pending[s] = []
+            buf = bufs[s]
+            shard = sharded.shards[s]
+            take = shard[cursors[s] : cursors[s] + chunk]
+            cursors[s] += take.shape[0]
+            evicted = drained_n = bypass_n = 0
+            if take.shape[0]:
+                tdegs = (indptr[take + 1] - indptr[take]).astype(np.int64)
+                trows, _, tcols = _expand_csr_batch(indptr, indices, take, tdegs)
+                asg = np.bincount(
+                    trows[part_of[tcols] != -1], minlength=take.shape[0]
                 )
-                if exhausted and not any(len(b) for b in bufs):
-                    break
-                # everything ingested got buffered - still a superstep, no sync
-                runner.step += 1
-                continue
-            cols = runner.run_superstep(batches)
-            if cols is not None and cols.size:
-                # boundary: every shard buffer learns about ALL placements
-                for s in range(num_shards):
-                    buf = bufs[s]
+                byp = tdegs >= d_max
+                comp = (~byp) & (asg == tdegs) & (tdegs > 0)
+                tl = take.tolist()
+                al = asg.tolist()
+                bypl = byp.tolist()
+                compl = comp.tolist()
+                for i in range(len(tl)):
+                    if bypl[i]:
+                        bypass_n += 1
+                        cand.append(tl[i])
+                    elif compl[i]:
+                        cand.append(tl[i])
+                    else:
+                        buf.push(tl[i], None, al[i])
+                while buf.full:
+                    u, _ = buf.pop_best()
+                    evicted += 1
+                    cand.append(u)
+            elif len(buf):
+                # cursor exhausted: drain the buffer in score order,
+                # chunk candidates per superstep
+                for _ in range(max(chunk - len(cand), 0)):
                     if not len(buf):
-                        continue
-                    for w in buf.notify_many(cols):
-                        buf.remove(w)
-                        pending[s].append(w)
+                        break
+                    u, _ = buf.pop_best()
+                    drained_n += 1
+                    cand.append(u)
+            return (
+                np.asarray(cand, dtype=np.int64),
+                evicted, drained_n, bypass_n, len(buf),
+            )
+
+        def notify(s: int, placed_cols: np.ndarray):
+            """Boundary: shard s's buffer learns about ALL placements.
+            Mutates only shard s's buffer and pending slot."""
+            buf = bufs[s]
+            if not len(buf):
+                return
+            for w in buf.notify_many(placed_cols):
+                buf.remove(w)
+                pending[s].append(w)
+
+        evictions = drained = bypass = peak = 0
+        try:
+            while True:
+                t0 = time.perf_counter()
+                results = [
+                    f.result()
+                    for f in [
+                        runner.pool.submit(ingest, s) for s in range(num_shards)
+                    ]
+                ]
+                runner.profile.add("prep", time.perf_counter() - t0)
+                batches = [r[0] for r in results]
+                for _, ev, dr, by, blen in results:
+                    evictions += ev
+                    drained += dr
+                    bypass += by
+                    if blen > peak:
+                        peak = blen
+                if all(b.shape[0] == 0 for b in batches):
+                    exhausted = all(
+                        cursors[s] >= sharded.shards[s].shape[0]
+                        for s in range(num_shards)
+                    )
+                    if exhausted and not any(len(b) for b in bufs):
+                        break
+                    # everything ingested got buffered - still a superstep,
+                    # no sync
+                    runner.step += 1
+                    continue
+                cols = runner.run_superstep(batches)
+                if cols is not None and cols.size:
+                    t1 = time.perf_counter()
+                    for f in [
+                        runner.pool.submit(notify, s, cols)
+                        for s in range(num_shards)
+                    ]:
+                        f.result()
+                    runner.profile.add("merge", time.perf_counter() - t1)
+        finally:
+            runner.close()
         eng.telemetry.update(
             buffer_evictions=evictions,
             buffer_drained=drained,

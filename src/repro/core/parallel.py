@@ -28,6 +28,7 @@ import time
 
 import numpy as np
 
+from repro.core import autotune
 from repro.core.base import FennelParams, PartitionState, finalize
 from repro.core.cuttana import _phase2_refine
 from repro.core.engine import (
@@ -41,6 +42,23 @@ from repro.core.subpartition import SubPartitioner
 from repro.graph.csr import CSRGraph
 
 __all__ = ["partition_parallel", "fennel_parallel"]
+
+
+def _resolve_knobs(
+    num_shards, chunk, *, algo: str, graph: CSRGraph, telemetry: dict | None
+) -> tuple[int, int]:
+    """Resolve ``num_shards=0``/"auto" and ``chunk=0`` through the tuning
+    artifact (see :mod:`repro.core.autotune`); record the source."""
+    tuning = autotune.resolve(
+        num_shards, chunk, algo=algo, num_vertices=graph.num_vertices
+    )
+    if telemetry is not None and tuning.source != "explicit":
+        telemetry["autotune"] = {
+            "num_shards": tuning.num_shards,
+            "chunk": tuning.chunk,
+            "source": tuning.source,
+        }
+    return tuning.num_shards, tuning.chunk
 
 
 def partition_parallel(
@@ -60,6 +78,7 @@ def partition_parallel(
     order: str = "natural",
     seed: int = 0,
     chunk: int = 512,
+    max_workers: int = 0,
     use_pallas: bool | None = None,
     interpret: bool = False,
     telemetry: dict | None = None,
@@ -68,12 +87,18 @@ def partition_parallel(
     shard cursors with bulk-synchronous supersteps, then phase-2 refinement.
 
     ``num_shards=1`` is bit-identical to :func:`repro.core.cuttana.partition`
-    under the same knobs. ``telemetry`` additionally receives the parallel
-    counters: ``supersteps``, ``sync_rounds``, ``boundary_conflicts``,
-    ``num_shards``.
+    under the same knobs; ``num_shards=0`` resolves through the auto-tuner
+    (:mod:`repro.core.autotune`), as does ``chunk=0``. ``max_workers``
+    threads run the per-shard superstep tasks (0 = auto,
+    ``min(num_shards, cpu_count)``); assignments are bit-identical for every
+    worker count. ``telemetry`` additionally receives the parallel counters
+    (``supersteps``, ``sync_rounds``, ``boundary_conflicts``,
+    ``num_shards``, ``max_workers``) and the per-superstep ``profile``.
     """
-    if int(num_shards) < 1:
-        raise ValueError(f"num_shards must be >= 1, got {num_shards!r}")
+    num_shards, chunk = _resolve_knobs(
+        num_shards, chunk, algo="cuttana-parallel", graph=graph,
+        telemetry=telemetry,
+    )
     n = graph.num_vertices
     if max_qsize is None:
         max_qsize = max(1024, n // 10)
@@ -99,7 +124,10 @@ def partition_parallel(
         subpartitioner=subp,
         order=order,
         seed=seed,
-        config=EngineConfig(chunk=chunk, use_pallas=use_pallas, interpret=interpret),
+        config=EngineConfig(
+            chunk=chunk, use_pallas=use_pallas, interpret=interpret,
+            max_workers=max_workers,
+        ),
     )
     engine.run()
     phase1_s = time.perf_counter() - t0
@@ -139,16 +167,22 @@ def fennel_parallel(
     order: str = "natural",
     seed: int = 0,
     chunk: int = 512,
+    max_workers: int = 0,
     use_pallas: bool | None = None,
     interpret: bool = False,
     telemetry: dict | None = None,
 ) -> np.ndarray:
     """Bulk-synchronous parallel FENNEL over ``num_shards`` shard cursors.
 
-    ``num_shards=1`` is bit-identical to :func:`repro.core.fennel.partition`.
+    ``num_shards=1`` is bit-identical to :func:`repro.core.fennel.partition`;
+    ``num_shards=0`` / ``chunk=0`` resolve through the auto-tuner, and
+    ``max_workers`` (0 = auto) sets the shard-task thread count without
+    affecting assignments.
     """
-    if int(num_shards) < 1:
-        raise ValueError(f"num_shards must be >= 1, got {num_shards!r}")
+    num_shards, chunk = _resolve_knobs(
+        num_shards, chunk, algo="fennel-parallel", graph=graph,
+        telemetry=telemetry,
+    )
     params = params or FennelParams()
     state = PartitionState.create(graph, k, epsilon, balance_mode, seed)
     t0 = time.perf_counter()
@@ -159,7 +193,10 @@ def fennel_parallel(
         ShardedImmediatePolicy(num_shards),
         order=order,
         seed=seed,
-        config=EngineConfig(chunk=chunk, use_pallas=use_pallas, interpret=interpret),
+        config=EngineConfig(
+            chunk=chunk, use_pallas=use_pallas, interpret=interpret,
+            max_workers=max_workers,
+        ),
     )
     engine.run()
     if telemetry is not None:

@@ -22,6 +22,7 @@ import time
 import numpy as np
 
 from repro.api.registry import get_info
+from repro.core import autotune
 from repro.core.base import FennelParams, PartitionState
 from repro.core.cuttana import refine_any
 from repro.core.engine import (
@@ -46,12 +47,18 @@ def partition_restream(
     seed: int = 0,
     chunk: int = 512,
     num_shards: int = 1,
+    max_workers: int = 0,
     use_pallas: bool | None = None,
     interpret: bool = False,
     telemetry: dict | None = None,
 ) -> np.ndarray:
     # validate eagerly: with passes=1 no re-pass engine is ever built, and
-    # with passes>=2 a late failure would waste the whole base partition
+    # with passes>=2 a late failure would waste the whole base partition.
+    # num_shards=0 resolves through the auto-tuner like the parallel algos.
+    if int(num_shards) == 0:
+        num_shards = autotune.resolve(
+            0, chunk, algo="restream", num_vertices=graph.num_vertices
+        ).num_shards
     num_shards = _check_num_shards(num_shards)
     t0 = time.perf_counter()
     base_info = get_info(base, kind="edge-cut")
@@ -81,7 +88,8 @@ def partition_restream(
             order=order,
             seed=seed + p,
             config=EngineConfig(
-                chunk=chunk, use_pallas=use_pallas, interpret=interpret
+                chunk=chunk, use_pallas=use_pallas, interpret=interpret,
+                max_workers=max_workers,
             ),
         )
         engine.run()

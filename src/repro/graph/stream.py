@@ -88,7 +88,12 @@ class ShardedStream:
         s = int(num_shards)
         if s < 1:
             raise ValueError(f"num_shards must be >= 1, got {num_shards}")
-        return cls(s, tuple(ids[i::s] for i in range(s)))
+        # materialize each cursor contiguously ONCE (O(n) total): `ids[i::s]`
+        # is a strided view, so every superstep batch sliced from it stayed
+        # strided and each consumer (degree gather, CSR expansion, kernel
+        # packing) re-paid a strided copy per superstep - O(n) of cache-
+        # hostile traffic per superstep instead of O(S) view bookkeeping
+        return cls(s, tuple(np.ascontiguousarray(ids[i::s]) for i in range(s)))
 
     @classmethod
     def from_order(

@@ -32,20 +32,22 @@ def neighbor_histograms_host(
     parts: np.ndarray,  # int[NNZ] neighbour partition ids, -1 = unassigned
     num_rows: int,
     k: int,
+    out: np.ndarray | None = None,  # float64[num_rows, K] to fill in place
 ) -> np.ndarray:
     """hist[B, K] of assigned-neighbour counts from flat (row, part) pairs.
 
     The CPU companion of the Pallas histogram: one ``bincount`` over the
     chunk's edges instead of a per-vertex loop (and instead of the jnp
     reference's [B, D, K] one-hot cube, which is far too slow for the
-    streaming hot path)."""
+    streaming hot path). ``out`` lets a shard worker fill its disjoint rows
+    of a preallocated superstep histogram without a second allocation."""
     mask = parts >= 0
     idx = rows[mask] * np.int64(k) + parts[mask]
-    return (
-        np.bincount(idx, minlength=num_rows * k)
-        .reshape(num_rows, k)
-        .astype(np.float64)
-    )
+    hist = np.bincount(idx, minlength=num_rows * k).reshape(num_rows, k)
+    if out is None:
+        return hist.astype(np.float64)
+    out[:] = hist
+    return out
 
 
 def fennel_scores(

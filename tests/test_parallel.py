@@ -199,14 +199,37 @@ def test_parallel_fennel_telemetry_counts_supersteps(graph):
 
 # ------------------------------------------------------------- validation
 def test_parallel_num_shards_validation(graph):
+    # num_shards=0 now means "auto"; only negatives are rejected
     with pytest.raises(ValueError, match="num_shards"):
-        partition_parallel(graph, 4, num_shards=0)
+        partition_parallel(graph, 4, num_shards=-1)
     with pytest.raises(ValueError, match="num_shards"):
         fennel_parallel(graph, 4, num_shards=-2)
     with pytest.raises(ValueError, match="num_shards"):
-        PartitionSpec(algo="cuttana-parallel", k=4, params={"num_shards": 0})
+        PartitionSpec(algo="cuttana-parallel", k=4, params={"num_shards": -1})
     with pytest.raises(ValueError, match="num_shards"):
         PartitionSpec(algo="fennel-parallel", k=4, params={"num_shards": 1.5})
+    with pytest.raises(ValueError, match="max_workers"):
+        PartitionSpec(algo="fennel-parallel", k=4, params={"max_workers": -1})
+    with pytest.raises(ValueError, match="chunk"):
+        PartitionSpec(algo="cuttana-parallel", k=4, params={"chunk": -1})
+    # chunk=0 ("auto") is reserved to the parallel algos
+    with pytest.raises(ValueError, match="chunk"):
+        PartitionSpec(algo="cuttana-restream", k=4, params={"chunk": 0})
+
+
+def test_num_shards_auto_spec_normalization(graph):
+    spec = PartitionSpec(
+        algo="fennel-parallel", k=4, params={"num_shards": "auto"}
+    )
+    assert spec.params.num_shards == 0
+    assert PartitionSpec.from_json(spec.to_json()) == spec
+    res = partition(graph, spec)
+    assert res.assignment.shape == (graph.num_vertices,)
+    auto = res.telemetry["autotune"]
+    assert auto["num_shards"] == res.telemetry["num_shards"] >= 1
+    assert auto["source"] in ("heuristic",) or auto["source"].startswith(
+        "artifact:"
+    )
 
 
 def test_sharded_policy_requires_affine_scorer(small_graph):
@@ -355,9 +378,9 @@ def test_restream_num_shards_validation(graph):
     from repro.core.restream import partition_restream
 
     with pytest.raises(ValueError, match="num_shards"):
-        partition_restream(graph, 4, num_shards=0)
+        partition_restream(graph, 4, num_shards=-1)
     with pytest.raises(ValueError, match="num_shards"):
-        PartitionSpec(algo="cuttana-restream", k=4, params={"num_shards": 0})
+        PartitionSpec(algo="cuttana-restream", k=4, params={"num_shards": -1})
 
 
 def test_restream_reassign_preserves_load_accounting(small_graph):
