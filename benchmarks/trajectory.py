@@ -5,9 +5,13 @@ compares such a report against a committed baseline (repo-root
 ``BENCH_partition.json``) and flags **regressions**:
 
 * quality metrics (``edge_cut``) worse than ``baseline * (1 + tolerance)``;
-* latency metrics (``stream_seconds``, ``convert_seconds``) worse than
+* latency metrics (``stream_seconds``, ``convert_seconds``, and the serving
+  suite's deterministic ``p99_sim_ms`` tail) worse than
   ``baseline * (1 + latency_tolerance)`` - wall clocks are noisier than the
   deterministic seeded quality numbers, so CI may loosen just this bound;
+* throughput metrics (``qps_sim`` - higher is better) *below*
+  ``baseline / (1 + latency_tolerance)``: the ratio is inverted so one
+  tolerance grammar covers both directions;
 * baseline rows that *disappeared* from a suite that still ran (silent
   coverage loss counts as a regression - a gate that compares nothing is no
   gate).
@@ -25,9 +29,11 @@ from __future__ import annotations
 
 __all__ = ["row_key", "collect_rows", "compare_reports"]
 
-# metric name -> kind; "lower is better" for all of them
+# metric name -> kind; QUALITY/LATENCY are "lower is better",
+# THROUGHPUT is "higher is better" (compared on the inverted ratio)
 QUALITY_METRICS = ("edge_cut",)
-LATENCY_METRICS = ("stream_seconds", "convert_seconds")
+LATENCY_METRICS = ("stream_seconds", "convert_seconds", "p99_sim_ms")
+THROUGHPUT_METRICS = ("qps_sim",)
 
 
 def row_key(suite: str, row: dict) -> str:
@@ -87,9 +93,10 @@ def compare_reports(
             )
             continue
         brow = base_rows[key]
-        for metric, tol in (
-            *((m, tolerance) for m in QUALITY_METRICS),
-            *((m, lat_tol) for m in LATENCY_METRICS),
+        for metric, tol, higher_is_better in (
+            *((m, tolerance, False) for m in QUALITY_METRICS),
+            *((m, lat_tol, False) for m in LATENCY_METRICS),
+            *((m, lat_tol, True) for m in THROUGHPUT_METRICS),
         ):
             bval = brow.get(metric)
             cval = crow.get(metric)
@@ -100,10 +107,17 @@ def compare_reports(
             if bval <= 0:
                 continue  # degenerate baseline: nothing meaningful to gate
             compared += 1
-            ratio = cval / bval
-            if ratio > 1.0 + tol:
+            if higher_is_better and cval <= 0:
                 regressions.append(
-                    f"{key}: {metric} regressed {ratio:.2f}x "
+                    f"{key}: {metric} collapsed to {cval:.6g} "
+                    f"(baseline {bval:.6g})"
+                )
+                continue
+            ratio = bval / cval if higher_is_better else cval / bval
+            if ratio > 1.0 + tol:
+                direction = "dropped" if higher_is_better else "regressed"
+                regressions.append(
+                    f"{key}: {metric} {direction} {ratio:.2f}x "
                     f"({bval:.6g} -> {cval:.6g}, tolerance +{tol:.0%})"
                 )
     return regressions, compared

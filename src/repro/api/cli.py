@@ -3,6 +3,8 @@
     python -m repro.api.cli partition --spec spec.json --out report.json \\
         [--dataset social-s | --rmat 20000 | --graph graph.bin] \\
         [--with-analytics] [--with-db]
+    python -m repro.api.cli serve-bench --spec spec.json --rmat 20000 \\
+        --queries 5000 --concurrency 1000 [--replication-budget 0.05]
     python -m repro.api.cli list
 
 ``partition`` loads a :class:`~repro.api.spec.PartitionSpec` from JSON, runs
@@ -11,8 +13,11 @@ on-disk graph file partitioned out-of-core via ``--graph`` - convert an edge
 list with ``scripts/convert_graph.py`` first; the spec's own ``source`` field
 is used when no graph flag is given), and
 emits a structured report (spec, timings, telemetry, quality metrics, and
-optionally the analytics cost model / DB workload numbers). ``list`` prints
-the declarative registry.
+optionally the analytics cost model / DB workload numbers). ``serve-bench``
+additionally stands up the partition-aware serving layer
+(:mod:`repro.serve.graph`) and drives a concurrent mixed query load through
+it, reporting throughput, p50/p95/p99 latency, and RPC/byte counts from the
+router's real message flow. ``list`` prints the declarative registry.
 """
 from __future__ import annotations
 
@@ -58,6 +63,43 @@ def _build_parser() -> argparse.ArgumentParser:
     p.add_argument("--with-db", action="store_true",
                    help="include the DB workload study in the report")
     p.add_argument("--db-queries", type=int, default=256)
+
+    s = sub.add_parser(
+        "serve-bench",
+        help="partition, stand up the serving layer, drive a query load",
+    )
+    s.add_argument("--spec", required=True, help="path to a PartitionSpec JSON file")
+    s.add_argument("--out", default=None,
+                   help="write the JSON report here (default: stdout)")
+    g = s.add_mutually_exclusive_group()
+    g.add_argument("--dataset", default=None,
+                   help="named benchmark dataset (e.g. social-s, ldbc-s)")
+    g.add_argument("--rmat", type=int, default=None, metavar="N",
+                   help="generate an N-vertex R-MAT graph instead")
+    g.add_argument("--graph", default=None, metavar="PATH",
+                   help="serve an on-disk graph file (.bin external CSR or "
+                        ".npz CSRGraph dump)")
+    s.add_argument("--avg-degree", type=float, default=16.0,
+                   help="R-MAT average degree (with --rmat)")
+    s.add_argument("--graph-seed", type=int, default=0,
+                   help="generator seed for --dataset/--rmat")
+    s.add_argument("--queries", type=int, default=1000,
+                   help="number of queries in the load run")
+    s.add_argument("--concurrency", type=int, default=256,
+                   help="closed-loop in-flight query slots")
+    s.add_argument("--mix", default=None, metavar="SPEC",
+                   help='query mix, e.g. "point=0.2,one_hop=0.4,two_hop=0.4"')
+    s.add_argument("--mode", choices=("closed", "open"), default="closed",
+                   help="arrival discipline of the load generator")
+    s.add_argument("--rate", type=float, default=None, metavar="QPS",
+                   help="open-loop arrival rate (with --mode open)")
+    s.add_argument("--load-seed", type=int, default=0,
+                   help="workload generator seed")
+    s.add_argument("--replication-budget", type=float, default=None,
+                   help="override the spec's boundary-replication budget")
+    s.add_argument("--max-workers", type=int, default=0,
+                   help="serving worker threads (0 = auto, one per "
+                        "partition up to cpu_count)")
 
     sub.add_parser("list", help="list the partitioner registry")
     return ap
@@ -146,10 +188,45 @@ def _cmd_list() -> int:
     return 0
 
 
+def _cmd_serve_bench(args) -> int:
+    from repro.api import PartitionSpec, partition
+
+    spec = PartitionSpec.from_json(Path(args.spec).read_text())
+    graph, graph_name = _load_graph(args, spec)
+    result = partition(graph, spec)
+    report = {
+        "spec": spec.to_dict(),
+        "graph": {
+            "name": graph_name,
+            "num_vertices": int(graph.num_vertices),
+            "num_edges": int(graph.num_edges),
+        },
+        "serving": result.serve_bench(
+            num_queries=args.queries,
+            concurrency=args.concurrency,
+            mix=args.mix,
+            seed=args.load_seed,
+            mode=args.mode,
+            rate_qps=args.rate,
+            replication_budget=args.replication_budget,
+            max_workers=args.max_workers,
+        ),
+    }
+    text = json.dumps(report, indent=2, sort_keys=True)
+    if args.out:
+        Path(args.out).write_text(text + "\n")
+        print(f"wrote {args.out}", file=sys.stderr)
+    else:
+        print(text)
+    return 0
+
+
 def main(argv=None) -> int:
     args = _build_parser().parse_args(argv)
     if args.cmd == "list":
         return _cmd_list()
+    if args.cmd == "serve-bench":
+        return _cmd_serve_bench(args)
     return _cmd_partition(args)
 
 

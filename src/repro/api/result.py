@@ -193,6 +193,69 @@ class PartitionResult:
             "total_scanned_edges": stats.total_scanned_edges,
         }
 
+    # ---------------------------------------------------------------- serving
+    def serve(
+        self,
+        replication_budget: float | None = None,
+        max_workers: int = 0,
+        fanout_cap: int = 64,
+        store_results: bool = True,
+    ):
+        """Stand up a partition-aware query service over this partition.
+
+        Returns an (unstarted) :class:`repro.serve.graph.GraphService`; use
+        it as a context manager or hand it to
+        :func:`repro.serve.graph.run_load`, which starts/stops it around the
+        load run. ``replication_budget`` defaults to the spec's own knob.
+        """
+        from repro.serve.graph import GraphService
+
+        budget = (
+            self.spec.replication_budget
+            if replication_budget is None
+            else replication_budget
+        )
+        return GraphService(
+            self.graph,
+            self.vertex_assignment(),
+            self.k,
+            replication_budget=budget,
+            max_workers=max_workers,
+            fanout_cap=fanout_cap,
+            store_results=store_results,
+        )
+
+    def serve_bench(
+        self,
+        num_queries: int = 1000,
+        concurrency: int = 256,
+        mix=None,
+        seed: int = 0,
+        mode: str = "closed",
+        rate_qps: float | None = None,
+        replication_budget: float | None = None,
+        max_workers: int = 0,
+        store_results: bool = False,
+    ) -> dict:
+        """Partition -> serve -> load-gen in one call; returns the serving
+        report as a JSON-ready dict (the CLI ``serve-bench`` payload)."""
+        from repro.serve.graph import run_load
+
+        report = run_load(
+            self.serve(
+                replication_budget=replication_budget,
+                max_workers=max_workers,
+                store_results=store_results,
+            ),
+            num_queries=num_queries,
+            concurrency=concurrency,
+            mix=mix,
+            seed=seed,
+            mode=mode,
+            rate_qps=rate_qps,
+        )
+        return jsonify(report.to_dict())
+
     # ----------------------------------------------------------------- report
     def to_report(
         self, include_assignment: bool = False, include_quality: bool = True

@@ -42,6 +42,11 @@ class PartitionSpec:
     # graph (".bin" external CSR partitioned out-of-core, ".npz" CSRGraph
     # dump). None means the caller supplies the graph object.
     source: str | None = None
+    # serving-layer knob (consumed by PartitionResult.serve(), applicable to
+    # every algorithm): boundary-vertex replica budget - a value in (0, 1)
+    # is a fraction of |V| (vertex, partition) replica pairs, >= 1 an
+    # absolute pair count, 0 disables replication.
+    replication_budget: float = 0.0
 
     def __post_init__(self) -> None:
         info = get_info(self.algo)
@@ -85,6 +90,15 @@ class PartitionSpec:
                         f"(accepted spec fields: {info.common or ('none',)}); "
                         f"leave it at its default {default!r}"
                     )
+        if (
+            not isinstance(self.replication_budget, (int, float))
+            or isinstance(self.replication_budget, bool)
+            or self.replication_budget < 0
+        ):
+            raise ValueError(
+                f"replication_budget must be a number >= 0, "
+                f"got {self.replication_budget!r}"
+            )
         if self.source is not None:
             # syntax-only validation (no filesystem I/O): a malformed source
             # fails at construction, a missing file fails at load time
@@ -110,6 +124,8 @@ class PartitionSpec:
         }
         if self.source is not None:
             d["source"] = self.source
+        if self.replication_budget != 0:
+            d["replication_budget"] = self.replication_budget
         if self.params is not None:
             d["params"] = dataclasses.asdict(self.params)
         return d

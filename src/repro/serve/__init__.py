@@ -1,12 +1,36 @@
-"""Serving layer: prefill + decode step builders and the sharded flash-decode
-attention live in their natural homes; this package re-exports the public
-serving API (see launch/serve.py for the driver)."""
-from repro.models.attention import gqa_flash_decode, mla_flash_decode
-from repro.train.step import make_decode_step, make_prefill_step
+"""Serving layer - two subsystems under one namespace:
 
-__all__ = [
+* :mod:`repro.serve.graph` - partition-aware graph query serving (router,
+  boundary replication, load generator, tail-latency metrics);
+* :mod:`repro.serve.lm` - LM prefill/decode step builders and the sharded
+  flash-decode attention (see ``launch/serve.py`` for the driver).
+
+The LM names were historically re-exported from this package root; those
+re-exports are kept (lazily, so importing graph serving never drags in jax)
+but deprecated - import from :mod:`repro.serve.lm` instead.
+"""
+import importlib
+
+_LM_EXPORTS = (
     "make_prefill_step",
     "make_decode_step",
     "gqa_flash_decode",
     "mla_flash_decode",
-]
+)
+_SUBMODULES = ("graph", "lm")
+
+__all__ = [*_LM_EXPORTS, *_SUBMODULES]
+
+
+def __getattr__(name):  # PEP 562: lazy + deprecated root re-exports
+    if name in _LM_EXPORTS:
+        from repro.serve import lm
+
+        return getattr(lm, name)
+    if name in _SUBMODULES:
+        return importlib.import_module(f"repro.serve.{name}")
+    raise AttributeError(f"module 'repro.serve' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(__all__)

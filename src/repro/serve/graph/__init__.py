@@ -1,0 +1,39 @@
+"""Partition-aware graph serving: router, replication, load gen, metrics.
+
+Turns a partition assignment into a running multi-worker query service and
+measures it under production-style load::
+
+    from repro.api import PartitionSpec, partition
+    from repro.serve.graph import run_load
+
+    result = partition(graph, PartitionSpec(algo="cuttana", k=8,
+                                            balance_mode="edge"))
+    report = run_load(result.serve(replication_budget=0.05),
+                      num_queries=5000, concurrency=1000)
+    print(report.qps_sim, report.latency_ms["sim"]["p99"], report.rpcs)
+
+See ``src/repro/serve/README.md`` for the architecture.
+"""
+from repro.serve.graph.loadgen import QueryMix, build_workload, run_load
+from repro.serve.graph.metrics import (
+    PartitionLoad,
+    QueryRecord,
+    ServingReport,
+    summarize,
+)
+from repro.serve.graph.replication import ReplicationPlan, plan_replication
+from repro.serve.graph.router import QUERY_KINDS, GraphService
+
+__all__ = [
+    "GraphService",
+    "QUERY_KINDS",
+    "QueryMix",
+    "QueryRecord",
+    "PartitionLoad",
+    "ServingReport",
+    "ReplicationPlan",
+    "plan_replication",
+    "build_workload",
+    "run_load",
+    "summarize",
+]

@@ -1,0 +1,15 @@
+"""LM serving: prefill + decode step builders and sharded flash-decode
+attention. The implementations live in their natural homes
+(:mod:`repro.train.step`, :mod:`repro.models.attention`; see
+``launch/serve.py`` for the driver) - this module is the public LM-serving
+namespace, moved here from the ``repro.serve`` package root so graph serving
+(:mod:`repro.serve.graph`) and LM serving coexist without collision."""
+from repro.models.attention import gqa_flash_decode, mla_flash_decode
+from repro.train.step import make_decode_step, make_prefill_step
+
+__all__ = [
+    "make_prefill_step",
+    "make_decode_step",
+    "gqa_flash_decode",
+    "mla_flash_decode",
+]
