@@ -12,6 +12,10 @@ compares such a report against a committed baseline (repo-root
 * throughput metrics (``qps_sim`` - higher is better) *below*
   ``baseline / (1 + latency_tolerance)``: the ratio is inverted so one
   tolerance grammar covers both directions;
+* footprint metrics (``bytes_on_disk`` of the converted graph,
+  ``peak_rss_mb`` of the partitioning process) worse than
+  ``baseline * (1 + tolerance)`` - these are deterministic, so they use the
+  tight quality tolerance;
 * baseline rows that *disappeared* from a suite that still ran (silent
   coverage loss counts as a regression - a gate that compares nothing is no
   gate).
@@ -27,13 +31,33 @@ gate must catch.
 """
 from __future__ import annotations
 
-__all__ = ["row_key", "collect_rows", "compare_reports"]
+__all__ = [
+    "row_key",
+    "collect_rows",
+    "compare_reports",
+    "QUALITY_METRICS",
+    "LATENCY_METRICS",
+    "THROUGHPUT_METRICS",
+    "FOOTPRINT_METRICS",
+]
 
-# metric name -> kind; QUALITY/LATENCY are "lower is better",
-# THROUGHPUT is "higher is better" (compared on the inverted ratio)
+# metric name -> kind; QUALITY/LATENCY/FOOTPRINT are "lower is better",
+# THROUGHPUT is "higher is better" (compared on the inverted ratio).
+# FOOTPRINT metrics (on-disk bytes of the converted graph, process peak RSS)
+# are deterministic like quality, so they gate at the tight tolerance - a
+# format change that silently bloats the compressed CSR or a streaming change
+# that re-materializes the graph in RAM fails the trajectory even when wall
+# clocks look fine. superstep_ms (mean per-superstep wall of the sharded
+# engines) is a wall clock and gates at the loose latency tolerance.
 QUALITY_METRICS = ("edge_cut",)
-LATENCY_METRICS = ("stream_seconds", "convert_seconds", "p99_sim_ms")
+LATENCY_METRICS = (
+    "stream_seconds",
+    "convert_seconds",
+    "p99_sim_ms",
+    "superstep_ms",
+)
 THROUGHPUT_METRICS = ("qps_sim",)
+FOOTPRINT_METRICS = ("bytes_on_disk", "peak_rss_mb")
 
 
 def row_key(suite: str, row: dict) -> str:
@@ -97,6 +121,7 @@ def compare_reports(
             *((m, tolerance, False) for m in QUALITY_METRICS),
             *((m, lat_tol, False) for m in LATENCY_METRICS),
             *((m, lat_tol, True) for m in THROUGHPUT_METRICS),
+            *((m, tolerance, False) for m in FOOTPRINT_METRICS),
         ):
             bval = brow.get(metric)
             cval = crow.get(metric)

@@ -41,8 +41,17 @@ def main(argv=None) -> int:
                          ".csv implies ',')")
     ap.add_argument("--tmp-dir", default=None,
                     help="spill directory for sort runs (default: system tmp)")
+    ap.add_argument("--format", type=int, choices=(1, 2), default=2,
+                    help="on-disk format: 2 = block-compressed delta-varint "
+                         "(default), 1 = raw int32 neighbour arrays")
+    ap.add_argument("--block-cap", type=int, default=None,
+                    help="values per compression block (v2 only; default 64)")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="converter threads for sort/compress passes "
+                         "(0 = auto: cpu_count)")
     args = ap.parse_args(argv)
 
+    from repro.graph.compress import DEFAULT_BLOCK_CAP
     from repro.graph.external import convert_edge_list
 
     t0 = time.perf_counter()
@@ -54,13 +63,25 @@ def main(argv=None) -> int:
         merge_block=args.merge_block,
         delimiter=args.delimiter,
         tmp_dir=args.tmp_dir,
+        format_version=args.format,
+        block_cap=(
+            args.block_cap if args.block_cap is not None else DEFAULT_BLOCK_CAP
+        ),
+        max_workers=args.workers,
     )
     seconds = time.perf_counter() - t0
+    ratio = stats.get("compression_ratio")
+    compressed = (
+        f", {stats['raw_bytes']} raw -> {stats['file_bytes']} on disk "
+        f"({ratio:.2f}x)"
+        if ratio
+        else f", {stats['file_bytes']} bytes"
+    )
     print(
-        f"wrote {args.output}: |V|={stats['num_vertices']} "
-        f"|E|={stats['num_edges']} ({stats['input_edges']} input rows, "
-        f"{stats['runs']} sort runs, {stats['file_bytes']} bytes) "
-        f"in {seconds:.1f}s",
+        f"wrote {args.output} (v{stats['format_version']}): "
+        f"|V|={stats['num_vertices']} |E|={stats['num_edges']} "
+        f"({stats['input_edges']} input rows, {stats['runs']} sort runs, "
+        f"{stats['workers']} workers{compressed}) in {seconds:.1f}s",
         file=sys.stderr,
     )
     return 0

@@ -53,6 +53,10 @@ def _build_parser() -> argparse.ArgumentParser:
                    help="generator seed for --dataset/--rmat")
     p.add_argument("--assignment-out", default=None,
                    help="also save the raw assignment as .npy")
+    p.add_argument("--prefetch", choices=("auto", "on", "off"), default=None,
+                   help="override the spec's out-of-core decode-ahead mode "
+                        "(auto = only for memory-mapped graphs); never "
+                        "changes assignments")
     p.add_argument("--skip-quality", action="store_true",
                    help="omit quality metrics from the report (they scan "
                         "the whole edge set - skip for graphs that "
@@ -136,10 +140,26 @@ def _load_graph(args, spec):
 
 
 def _cmd_partition(args) -> int:
+    import dataclasses
+
     from repro.api import PartitionSpec, partition
 
     spec_text = Path(args.spec).read_text()
     spec = PartitionSpec.from_json(spec_text)
+    if args.prefetch is not None:
+        params = spec.params
+        fields = (
+            {f.name for f in dataclasses.fields(params)}
+            if params is not None
+            else set()
+        )
+        if "prefetch" not in fields:
+            raise SystemExit(
+                f"{spec.algo!r} does not accept a prefetch knob"
+            )
+        spec = spec.replace(
+            params=dataclasses.replace(params, prefetch=args.prefetch)
+        )
     graph, graph_name = _load_graph(args, spec)
     result = partition(graph, spec)
     report = result.to_report(include_quality=not args.skip_quality)

@@ -45,12 +45,15 @@ _STREAM_COMMON = ("epsilon", "balance_mode", "order", "seed")
 # ------------------------------------------------------- typed params blocks
 @dataclasses.dataclass(frozen=True)
 class FennelAlgoParams:
-    """FENNEL knobs (paper Eq. 7). ``hybrid`` only bites in edge mode."""
+    """FENNEL knobs (paper Eq. 7). ``hybrid`` only bites in edge mode.
+    ``prefetch`` ("auto"/"on"/"off") controls the out-of-core decode-ahead
+    pipeline; it never changes assignments."""
 
     gamma: float = 1.5
     alpha_scale: float = 1.0
     hybrid: bool = True
     chunk: int = 512
+    prefetch: str = "auto"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,6 +74,7 @@ class CuttanaAlgoParams:
     thresh: float = 0.0
     max_moves: int | None = None
     chunk: int = 512
+    prefetch: str = "auto"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,6 +97,7 @@ class CuttanaParallelAlgoParams:
     max_moves: int | None = None
     chunk: int = 512
     max_workers: int = 0
+    prefetch: str = "auto"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,6 +112,7 @@ class FennelParallelAlgoParams:
     hybrid: bool = True
     chunk: int = 512
     max_workers: int = 0
+    prefetch: str = "auto"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -300,7 +306,7 @@ def _register_all() -> None:
         PartitionerInfo(
             "cuttana-legacy", "repro.core.legacy:cuttana_partition", "edge-cut",
             "buffered", "legacy", both, _STREAM_COMMON, CuttanaAlgoParams,
-            forward_exclude=("chunk",),
+            forward_exclude=("chunk", "prefetch"),
             description="seed per-vertex CUTTANA loop",
         ),
         PartitionerInfo(
@@ -312,7 +318,7 @@ def _register_all() -> None:
         PartitionerInfo(
             "fennel-legacy", "repro.core.legacy:fennel_partition", "edge-cut",
             "immediate", "legacy", both, _STREAM_COMMON, FennelAlgoParams,
-            forward_exclude=("chunk",),
+            forward_exclude=("chunk", "prefetch"),
             fennel_params_fields=("gamma", "alpha_scale", "hybrid"),
             description="seed per-vertex FENNEL loop",
         ),

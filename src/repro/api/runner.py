@@ -112,6 +112,9 @@ def partition(
         graph_backing=backing,
         peak_graph_bytes=peak_graph_bytes,
         mapped_graph_bytes=mapped_graph_bytes,
+        # block-compressed (v2) on-disk payload: byte index + varint data;
+        # 0 for raw v1 files and resident graphs
+        compressed_graph_bytes=int(getattr(graph, "nbytes_compressed", 0) or 0),
     )
     return PartitionResult(
         spec=spec,

@@ -240,4 +240,9 @@ def _check_param_types(info: PartitionerInfo, block: Any):
                     f"{info.name!r} param 'chunk' must be >= 1{hint}, "
                     f"got {value!r}"
                 )
+        if field.name == "prefetch" and value not in ("auto", "on", "off"):
+            raise ValueError(
+                f"{info.name!r} param 'prefetch' must be one of "
+                f"'auto', 'on', 'off', got {value!r}"
+            )
     return block

@@ -107,6 +107,7 @@ def partition(
     chunk: int = 512,
     use_pallas: bool | None = None,
     interpret: bool = False,
+    prefetch: str = "auto",
     telemetry: dict | None = None,
 ):
     """Full CUTTANA partitioner. Ablations: ``use_buffer=False`` /
@@ -150,7 +151,10 @@ def partition(
         subpartitioner=subp,
         order=order,
         seed=seed,
-        config=EngineConfig(chunk=chunk, use_pallas=use_pallas, interpret=interpret),
+        config=EngineConfig(
+            chunk=chunk, use_pallas=use_pallas, interpret=interpret,
+            prefetch=prefetch,
+        ),
     )
     engine.run()
     phase1_s = time.perf_counter() - t0

@@ -54,6 +54,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Protocol, runtime_checkable
 
 import numpy as np
@@ -64,6 +65,7 @@ from repro.core.executor import ShardPool
 from repro.core.profile import SuperstepProfiler
 from repro.core.subpartition import SubPartitioner
 from repro.graph.csr import CSRGraph
+from repro.graph.prefetch import BatchPrefetcher, PrefetchStats
 from repro.graph.stream import ShardedStream, stream_order
 from repro.kernels.partition_score.ops import (
     fennel_scores,
@@ -270,7 +272,15 @@ class EngineConfig:
     are bit-identical for every worker count because shard tasks write
     disjoint buffers. ``wave`` is the vectorised placement width inside a
     shard task: candidates are scored ``wave`` at a time against a frozen
-    penalty/histogram view, refreshed exactly between waves."""
+    penalty/histogram view, refreshed exactly between waves.
+
+    ``prefetch`` controls the decode-ahead pipeline for out-of-core graphs:
+    ``"auto"`` overlaps chunk/superstep decode with scoring only when the
+    graph is memory-mapped, ``"on"`` forces it, ``"off"`` disables it AND the
+    sharded ahead-of-time frontier expansion - the true synchronous baseline
+    the out-of-core benchmarks compare against. The prefetcher consumes the
+    identical fetch results in the identical order, so assignments are
+    bit-identical across all three modes."""
 
     chunk: int = 512
     sample_cap: int = 512
@@ -279,6 +289,22 @@ class EngineConfig:
     interpret: bool = False
     max_workers: int | None = None
     wave: int = 128
+    prefetch: str = "auto"
+
+
+def _resolve_prefetch(mode: str, graph) -> tuple[bool, bool]:
+    """``(decode_ahead, ahead_prep)`` for a prefetch mode: ``"on"`` forces
+    the decode pipeline, ``"off"`` disables it and the sharded ahead-of-time
+    frontier expansion, ``"auto"`` enables the pipeline only for mapped
+    graphs (anything exposing ``backing == "mapped"``) and leaves ahead-prep
+    on - resident runs keep their existing overlap."""
+    if mode not in ("auto", "on", "off"):
+        raise ValueError(f'prefetch must be "auto", "on" or "off", got {mode!r}')
+    if mode == "on":
+        return True, True
+    if mode == "off":
+        return False, False
+    return getattr(graph, "backing", "resident") == "mapped", True
 
 
 # ----------------------------------------------------------------- policies
@@ -309,20 +335,15 @@ class ImmediatePolicy:
     # ------------------------------------------------- generic scorer path
     def _run_generic(self, eng: "StreamEngine") -> None:
         """Protocol-only path for custom scorers: per-vertex numpy scoring."""
-        cfg = eng.config
         state = eng.state
         scorer = eng.scorer
         subp = eng.subp
-        indptr, indices = eng.graph.indptr, eng.graph.indices
-        ids = eng.ids
         part_of = state.part_of
         v_counts, e_counts = state.v_counts, state.e_counts
         reassign = self.reassign
-        for start in range(0, ids.shape[0], cfg.chunk):
-            batch = ids[start : start + cfg.chunk]
-            degs = (indptr[batch + 1] - indptr[batch]).astype(np.int64)
-            nbr_views = [indices[indptr[v] : indptr[v + 1]] for v in batch]
-            hist, corr = eng.chunk_histograms(batch, degs, nbr_views)
+        for batch, degs, expanded in _iter_chunk_expansions(eng):
+            nbr_views = _chunk_views(expanded[2], degs)
+            hist, corr = eng.chunk_histograms(batch, degs, nbr_views, expanded)
             bl = batch.tolist()
             dl = degs.tolist()
             for i in range(len(bl)):
@@ -368,12 +389,9 @@ class ImmediatePolicy:
         per chunk. Every operation is the same IEEE double computation as
         the generic path, so results stay bit-identical - parity-tested
         against :mod:`repro.core.legacy`."""
-        cfg = eng.config
         state = eng.state
         scorer = eng.scorer
         subp = eng.subp
-        indptr, indices = eng.graph.indptr, eng.graph.indices
-        ids = eng.ids
         part_of = state.part_of
         v_counts, e_counts = state.v_counts, state.e_counts
         reassign = self.reassign
@@ -384,15 +402,13 @@ class ImmediatePolicy:
         cap = state.vertex_capacity if vertex_mode else state.edge_capacity
         neg_inf = float("-inf")
         sc = [neg_inf] * k  # per-vertex score buffer (neg_inf == disallowed)
-        for start in range(0, ids.shape[0], cfg.chunk):
-            batch = ids[start : start + cfg.chunk]
-            degs = (indptr[batch + 1] - indptr[batch]).astype(np.int64)
+        for batch, degs, expanded in _iter_chunk_expansions(eng):
             nbr_views = (
-                [indices[indptr[v] : indptr[v + 1]] for v in batch]
+                _chunk_views(expanded[2], degs)
                 if subp is not None or eng.on_chunk_end is not None
                 else None
             )
-            hist, corr = eng.chunk_histograms(batch, degs, nbr_views)
+            hist, corr = eng.chunk_histograms(batch, degs, nbr_views, expanded)
             H = hist.tolist()
             bl = batch.tolist()
             dl = degs.tolist()
@@ -488,7 +504,6 @@ class BufferedPolicy:
 
     def run(self, eng: "StreamEngine") -> None:
         state = eng.state
-        indptr, indices = eng.graph.indptr, eng.graph.indices
         buf = PriorityBuffer(self.max_qsize, self.d_max, self.theta, graph=eng.graph)
         self.buffer = buf
         part_of = state.part_of
@@ -503,26 +518,30 @@ class BufferedPolicy:
                 for w in buf.notify_many(un):
                     worklist.append((w, buf.remove(w)))
 
-        for v in eng.ids:
-            v = int(v)
-            if part_of[v] != -1:
-                continue  # already placed via complete-eviction cascade
-            nbrs = indices[indptr[v] : indptr[v + 1]]
-            if nbrs.size >= d_max:
-                bypass += 1
-                cascade(v, nbrs)
-                continue
-            assigned = int((part_of[nbrs] != -1).sum())
-            if assigned == nbrs.size and nbrs.size > 0:
-                cascade(v, nbrs)  # complete already
-                continue
-            buf.push(v, nbrs, assigned)
-            if len(buf) > peak:
-                peak = len(buf)
-            if buf.full:
-                u, un = buf.pop_best()
-                evictions += 1
-                cascade(u, un)
+        # admission reads neighbour rows a chunk at a time so the prefetcher
+        # can decode chunk t+1 while chunk t's buffer churn runs; the
+        # cascade/eviction rows stay data-dependent per-row reads
+        for batch, degs, expanded in _iter_chunk_expansions(eng):
+            views = _chunk_views(expanded[2], degs)
+            for i, v in enumerate(batch.tolist()):
+                if part_of[v] != -1:
+                    continue  # already placed via complete-eviction cascade
+                nbrs = views[i]
+                if nbrs.size >= d_max:
+                    bypass += 1
+                    cascade(v, nbrs)
+                    continue
+                assigned = int((part_of[nbrs] != -1).sum())
+                if assigned == nbrs.size and nbrs.size > 0:
+                    cascade(v, nbrs)  # complete already
+                    continue
+                buf.push(v, nbrs, assigned)
+                if len(buf) > peak:
+                    peak = len(buf)
+                if buf.full:
+                    u, un = buf.pop_best()
+                    evictions += 1
+                    cascade(u, un)
         while len(buf):
             u, un = buf.pop_best()
             drained += 1
@@ -548,6 +567,44 @@ def _expand_csr_batch(indptr, indices, batch, degs):
     idx_in_row = np.arange(rows.shape[0], dtype=np.int64) - offs[rows]
     cols = indices[np.repeat(indptr[batch], degs) + idx_in_row]
     return rows, idx_in_row, cols
+
+
+def _chunk_views(cols, degs):
+    """Per-row neighbour arrays from a flat chunk expansion - same values as
+    slicing ``indices`` row by row, but without re-touching the graph."""
+    if degs.shape[0] == 0:
+        return []
+    return np.split(cols, np.cumsum(degs[:-1]))
+
+
+def _iter_chunk_expansions(eng: "StreamEngine"):
+    """Yield ``(batch, degs, (rows, idx_in_row, cols))`` per stream chunk.
+
+    The fetch touches only the immutable CSR read surface, so when the
+    engine's prefetcher is enabled chunk t+1 is expanded (for a compressed
+    mapped graph: varint-decoded) on the prefetch thread while chunk t is
+    being scored. Inline and prefetched paths run the identical fetch in the
+    identical order, so the consumed stream is bit-identical either way.
+    """
+    indptr, indices = eng.graph.indptr, eng.graph.indices
+    ids = eng.ids
+    chunk = eng.config.chunk
+
+    def fetch(start):
+        batch = ids[start : start + chunk]
+        degs = (indptr[batch + 1] - indptr[batch]).astype(np.int64)
+        return batch, degs, _expand_csr_batch(indptr, indices, batch, degs)
+
+    starts = range(0, ids.shape[0], chunk)
+    if not eng.prefetch_enabled:
+        for s in starts:
+            yield fetch(s)
+        return
+    pf = BatchPrefetcher(fetch, starts, stats=eng.prefetch_stats)
+    try:
+        yield from pf
+    finally:
+        pf.close()
 
 
 # --------------------------------------------------------- sharded policies
@@ -659,6 +716,15 @@ class _SuperstepRunner:
         self.wave = max(int(eng.config.wave), 1)
         self.pool = ShardPool(eng.config.max_workers, sharded.num_shards)
         self.profile = SuperstepProfiler(workers=self.pool.workers)
+        self.prefetch_ahead = eng.prefetch_ahead
+        # with an inline (single-worker) pool, prepare_async would run on the
+        # calling thread and the ahead-prep overlap would silently vanish; a
+        # dedicated decode thread keeps the pipeline real on one core
+        self._prefetch_ex: ThreadPoolExecutor | None = (
+            ThreadPoolExecutor(1, thread_name_prefix="prefetch")
+            if eng.prefetch_enabled and self.pool.workers == 1
+            else None
+        )
         self._subp_chain = None
         self._v0: np.ndarray | None = None
         self._e0: np.ndarray | None = None
@@ -671,25 +737,49 @@ class _SuperstepRunner:
             self._subp_chain.result()
             self.profile.add("merge", time.perf_counter() - t0)
             self._subp_chain = None
+        if self._prefetch_ex is not None:
+            self._prefetch_ex.shutdown(wait=True)
+            self._prefetch_ex = None
         self.pool.shutdown()
 
     # ----------------------------------------------------------- prefetch
     def prepare_async(self, batches: list[np.ndarray]) -> list:
         """Submit per-shard frontier expansion; futures align with shards."""
-        indptr, indices = self.eng.graph.indptr, self.eng.graph.indices
+        eng = self.eng
+        indptr, indices = eng.graph.indptr, eng.graph.indices
+        fn = _prepare_shard
+        if eng.prefetch_enabled:
+            stats = eng.prefetch_stats
+
+            def fn(ip, ix, b):
+                t0 = time.perf_counter()
+                try:
+                    return _prepare_shard(ip, ix, b)
+                finally:
+                    stats.record_decode(time.perf_counter() - t0)
+
+        submit = (
+            self._prefetch_ex.submit
+            if self._prefetch_ex is not None
+            else self.pool.submit
+        )
         return [
-            self.pool.submit(_prepare_shard, indptr, indices, b)
-            if b.shape[0]
-            else None
+            submit(fn, indptr, indices, b) if b.shape[0] else None
             for b in batches
         ]
 
-    def wait_preps(self, futs: list | None) -> list[_ShardPrep | None] | None:
+    def wait_preps(
+        self, futs: list | None, record: bool = False
+    ) -> list[_ShardPrep | None] | None:
         if futs is None:
             return None
+        hit = all(f is None or f.done() for f in futs)
         t0 = time.perf_counter()
         preps = [f.result() if f is not None else None for f in futs]
-        self.profile.add("prep", time.perf_counter() - t0)
+        wait = time.perf_counter() - t0
+        self.profile.add("prep", wait)
+        if record and self.eng.prefetch_enabled:
+            self.eng.prefetch_stats.record_wait(wait, hit)
         return preps
 
     # -------------------------------------------------------- histogramming
@@ -1042,17 +1132,23 @@ class ShardedImmediatePolicy:
         runner = _SuperstepRunner(eng, sharded, reassign=self.reassign)
         try:
             steps = list(sharded.superstep_batches(eng.config.chunk))
-            prefetched = runner.prepare_async(steps[0]) if steps else None
-            for t, batches in enumerate(steps):
-                preps = runner.wait_preps(prefetched)
-                # overlap: expand superstep t+1's frontier while t scores,
-                # places and merges (expansion reads only the immutable CSR)
-                prefetched = (
-                    runner.prepare_async(steps[t + 1])
-                    if t + 1 < len(steps)
-                    else None
-                )
-                runner.run_superstep(batches, preps)
+            if not runner.prefetch_ahead:
+                # prefetch="off": the true synchronous baseline - every
+                # superstep expands its own frontier before scoring
+                for batches in steps:
+                    runner.run_superstep(batches)
+            else:
+                prefetched = runner.prepare_async(steps[0]) if steps else None
+                for t, batches in enumerate(steps):
+                    preps = runner.wait_preps(prefetched, record=True)
+                    # overlap: expand superstep t+1's frontier while t scores,
+                    # places and merges (expansion reads only the immutable CSR)
+                    prefetched = (
+                        runner.prepare_async(steps[t + 1])
+                        if t + 1 < len(steps)
+                        else None
+                    )
+                    runner.run_superstep(batches, preps)
         finally:
             runner.close()
         runner.finalize_telemetry()
@@ -1105,6 +1201,40 @@ class ShardedBufferedPolicy:
         pending: list[list[int]] = [[] for _ in range(num_shards)]
         cursors = [0] * num_shards
         d_max = self.d_max
+        prefetch_on = eng.prefetch_enabled
+        stats = eng.prefetch_stats
+        # decode-ahead slots: shard -> (cursor snapshot, in-flight scan).
+        # Each slot is written on the main thread between rounds and consumed
+        # only by that shard's ingest task, so access stays disjoint.
+        adm: dict[int, tuple[int, object]] = {}
+
+        def scan(s: int, cursor: int):
+            """Assignment-independent half of shard s's ingest: the stream
+            slice and its (decoded) neighbour expansion. Reads only the
+            immutable CSR, so it may overlap a superstep writing ``part_of``."""
+            take = sharded.shards[s][cursor : cursor + chunk]
+            if not take.shape[0]:
+                return take, None, None
+            tdegs = (indptr[take + 1] - indptr[take]).astype(np.int64)
+            trows, _, tcols = _expand_csr_batch(indptr, indices, take, tdegs)
+            return take, tdegs, (trows, tcols)
+
+        def timed_scan(s: int, cursor: int):
+            t0 = time.perf_counter()
+            try:
+                return scan(s, cursor)
+            finally:
+                stats.record_decode(time.perf_counter() - t0)
+
+        def prefetch_scans():
+            """Queue the next round's admission scans: once every ingest has
+            returned, the round's cursors are final, so the next slices are
+            known and can decode while the superstep scores and places."""
+            ex = runner._prefetch_ex
+            submit = ex.submit if ex is not None else runner.pool.submit
+            for s in range(num_shards):
+                if cursors[s] < sharded.shards[s].shape[0]:
+                    adm[s] = (cursors[s], submit(timed_scan, s, cursors[s]))
 
         def ingest(s: int):
             """One shard's superstep ingest: admission scan + buffer churn.
@@ -1115,13 +1245,19 @@ class ShardedBufferedPolicy:
             cand = pending[s]
             pending[s] = []
             buf = bufs[s]
-            shard = sharded.shards[s]
-            take = shard[cursors[s] : cursors[s] + chunk]
+            pre = adm.pop(s, None)
+            if pre is not None and pre[0] == cursors[s]:
+                fut = pre[1]
+                was_ready = fut.done()
+                t0 = time.perf_counter()
+                take, tdegs, texp = fut.result()
+                stats.record_wait(time.perf_counter() - t0, was_ready)
+            else:
+                take, tdegs, texp = scan(s, cursors[s])
             cursors[s] += take.shape[0]
             evicted = drained_n = bypass_n = 0
             if take.shape[0]:
-                tdegs = (indptr[take + 1] - indptr[take]).astype(np.int64)
-                trows, _, tcols = _expand_csr_batch(indptr, indices, take, tdegs)
+                trows, tcols = texp
                 asg = np.bincount(
                     trows[part_of[tcols] != -1], minlength=take.shape[0]
                 )
@@ -1169,6 +1305,8 @@ class ShardedBufferedPolicy:
 
         evictions = drained = bypass = peak = 0
         try:
+            if prefetch_on:
+                prefetch_scans()
             while True:
                 t0 = time.perf_counter()
                 results = [
@@ -1178,6 +1316,8 @@ class ShardedBufferedPolicy:
                     ]
                 ]
                 runner.profile.add("prep", time.perf_counter() - t0)
+                if prefetch_on:
+                    prefetch_scans()
                 batches = [r[0] for r in results]
                 for _, ev, dr, by, blen in results:
                     evictions += ev
@@ -1253,6 +1393,10 @@ class StreamEngine:
         # kernel_calls counts fused chunk-histogram calls, single_place_calls
         # the host-scored placements (buffered policy); policies add their own
         self.telemetry: dict = {"kernel_calls": 0, "single_place_calls": 0}
+        self.prefetch_enabled, self.prefetch_ahead = _resolve_prefetch(
+            self.config.prefetch, graph
+        )
+        self.prefetch_stats = PrefetchStats()
         self._sample_rng = np.random.default_rng(seed)
         self._pos = np.full(graph.num_vertices, -1, dtype=np.int64)
         self._zero_sizes = np.zeros(state.k, dtype=np.float32)
@@ -1261,6 +1405,13 @@ class StreamEngine:
     def run(self) -> PartitionState:
         self.scorer.begin(self.state)
         self.policy.run(self)
+        if self.prefetch_enabled:
+            self.telemetry.update(self.prefetch_stats.to_telemetry())
+        # a compressed indices proxy reports exact varint-decode wall time;
+        # prefer it over the prefetcher's coarser fetch-wall aggregate
+        decode_s = getattr(self.graph.indices, "decode_seconds", None)
+        if decode_s is not None:
+            self.telemetry["decode_wall_s"] = round(float(decode_s), 6)
         return self.state
 
     # ------------------------------------------------- per-vertex placement
@@ -1285,6 +1436,7 @@ class StreamEngine:
         batch: np.ndarray,
         degs: np.ndarray,
         nbr_views: list[np.ndarray] | None = None,
+        expanded: tuple | None = None,
     ):
         """All C x K assigned-neighbour histograms for a chunk via one fused
         kernel call.
@@ -1294,7 +1446,10 @@ class StreamEngine:
         ``dst[starts[i]:starts[i+1]]`` lists the later chunk positions that
         have ``batch[i]`` as a neighbour - the rows to bump when ``batch[i]``
         is assigned (the stale-histogram correction that makes exact mode
-        bit-identical to the sequential loops)."""
+        bit-identical to the sequential loops). ``expanded`` is an optional
+        precomputed :func:`_expand_csr_batch` result for the chunk - the
+        prefetch pipeline passes it so a compressed graph is decoded once,
+        not once per consumer."""
         cfg = self.config
         state = self.state
         c = batch.shape[0]
@@ -1306,7 +1461,9 @@ class StreamEngine:
         if not cfg.exact:
             w = min(w, cfg.sample_cap)
         indptr, indices = self.graph.indptr, self.graph.indices
-        rows, idx_in_row, cols = _expand_csr_batch(indptr, indices, batch, degs)
+        if expanded is None:
+            expanded = _expand_csr_batch(indptr, indices, batch, degs)
+        rows, idx_in_row, cols = expanded
         part_of = state.part_of
         scale = None
         sampled: list[tuple[int, np.ndarray]] = []

@@ -56,6 +56,9 @@ class _InlineFuture:
             raise self._exc
         return self._value
 
+    def done(self) -> bool:
+        return True
+
 
 class ShardPool:
     """``min(max_workers, S)`` threads for per-shard superstep tasks.

@@ -30,6 +30,7 @@ def partition(
     chunk: int = 512,
     use_pallas: bool | None = None,
     interpret: bool = False,
+    prefetch: str = "auto",
     telemetry: dict | None = None,
 ) -> np.ndarray:
     params = params or FennelParams()
@@ -42,7 +43,10 @@ def partition(
         ImmediatePolicy(),
         order=order,
         seed=seed,
-        config=EngineConfig(chunk=chunk, use_pallas=use_pallas, interpret=interpret),
+        config=EngineConfig(
+            chunk=chunk, use_pallas=use_pallas, interpret=interpret,
+            prefetch=prefetch,
+        ),
     )
     engine.run()
     if telemetry is not None:

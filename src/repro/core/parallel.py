@@ -81,6 +81,7 @@ def partition_parallel(
     max_workers: int = 0,
     use_pallas: bool | None = None,
     interpret: bool = False,
+    prefetch: str = "auto",
     telemetry: dict | None = None,
 ) -> np.ndarray:
     """Shard-parallel CUTTANA: Algorithm 1 over ``num_shards`` interleaved
@@ -126,7 +127,7 @@ def partition_parallel(
         seed=seed,
         config=EngineConfig(
             chunk=chunk, use_pallas=use_pallas, interpret=interpret,
-            max_workers=max_workers,
+            max_workers=max_workers, prefetch=prefetch,
         ),
     )
     engine.run()
@@ -170,6 +171,7 @@ def fennel_parallel(
     max_workers: int = 0,
     use_pallas: bool | None = None,
     interpret: bool = False,
+    prefetch: str = "auto",
     telemetry: dict | None = None,
 ) -> np.ndarray:
     """Bulk-synchronous parallel FENNEL over ``num_shards`` shard cursors.
@@ -195,7 +197,7 @@ def fennel_parallel(
         seed=seed,
         config=EngineConfig(
             chunk=chunk, use_pallas=use_pallas, interpret=interpret,
-            max_workers=max_workers,
+            max_workers=max_workers, prefetch=prefetch,
         ),
     )
     engine.run()

@@ -1,0 +1,507 @@
+"""Compressed CSR v2 subsystem tests.
+
+Covers the delta-varint codec (``repro.graph.compress``) - deterministic
+round-trips plus hypothesis property tests when the library is installed -
+the v2 on-disk format (corruption rejection, v1 compatibility, measured
+compression on power-law graphs), the parallel converter, converter cleanup
+on failure, the prefetch pipeline (``repro.graph.prefetch``) and its
+``prefetch`` knob threading through spec/CLI, all pinned to bit-identical
+assignments.
+"""
+from __future__ import annotations
+
+import importlib.util
+import json
+import os
+import struct
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.api import PartitionSpec, partition
+from repro.graph.compress import (
+    DEFAULT_BLOCK_CAP,
+    MAX_VARINT_BYTES,
+    decode_adjacency,
+    encode_adjacency,
+    varint_decode,
+    varint_encode,
+)
+from repro.graph.external import (
+    FORMAT_VERSION,
+    FORMAT_VERSION_V2,
+    HEADER_BYTES,
+    ExternalCSRGraph,
+    convert_csr,
+    convert_edge_list,
+    raw_file_bytes,
+    write_external_csr,
+)
+from repro.graph.generators import rmat_graph
+from repro.graph.prefetch import BatchPrefetcher, PrefetchStats
+
+HAS_HYPOTHESIS = importlib.util.find_spec("hypothesis") is not None
+
+
+def _sorted_rows(rng, num_rows, max_id=10_000, max_deg=200):
+    """Random strictly-increasing rows -> (flat, degs), the codec's input."""
+    rows = []
+    for _ in range(num_rows):
+        deg = int(rng.integers(0, max_deg))
+        row = np.unique(rng.integers(0, max_id, size=deg))
+        rows.append(row.astype(np.int64))
+    degs = np.array([r.shape[0] for r in rows], dtype=np.int64)
+    flat = (
+        np.concatenate(rows) if rows else np.empty(0, np.int64)
+    )
+    return flat, degs
+
+
+# ------------------------------------------------------------------- varint
+class TestVarint:
+    def test_roundtrip_boundary_values(self):
+        # every LEB128 width boundary, 1 through 9 bytes
+        vals = [0, 1, 127, 128, 16383, 16384]
+        vals += [(1 << (7 * j)) - 1 for j in range(3, 9)]
+        vals += [1 << (7 * j) for j in range(3, 9)]
+        vals += [2**63 - 1]
+        vals = np.array(vals, dtype=np.int64)
+        buf, nb = varint_encode(vals)
+        assert int(nb.sum()) == buf.shape[0]
+        assert int(nb.max()) <= MAX_VARINT_BYTES
+        out, starts = varint_decode(buf, count=vals.shape[0])
+        assert np.array_equal(out, vals)
+        assert np.array_equal(starts, np.cumsum(nb) - nb)
+
+    def test_empty(self):
+        buf, nb = varint_encode(np.empty(0, np.int64))
+        assert buf.shape == (0,) and nb.shape == (0,)
+        out, _ = varint_decode(buf, count=0)
+        assert out.shape == (0,)
+
+    def test_rejects_negative(self):
+        with pytest.raises(ValueError, match="negative"):
+            varint_encode(np.array([3, -1], dtype=np.int64))
+
+    def test_rejects_truncated_stream(self):
+        buf, _ = varint_encode(np.array([300], dtype=np.int64))
+        assert buf.shape[0] == 2  # chopping the tail leaves a dangling byte
+        with pytest.raises(ValueError, match="truncated"):
+            varint_decode(buf[:-1], count=1)
+
+    def test_rejects_continuation_bit_on_last_byte(self):
+        buf, _ = varint_encode(np.array([300, 5], dtype=np.int64))
+        bad = buf.copy()
+        bad[-1] |= 0x80  # last byte now claims a continuation
+        with pytest.raises(ValueError, match="truncated"):
+            varint_decode(bad, count=2)
+
+    def test_rejects_count_mismatch(self):
+        buf, _ = varint_encode(np.array([1, 2, 3], dtype=np.int64))
+        with pytest.raises(ValueError, match="count mismatch"):
+            varint_decode(buf, count=2)
+        with pytest.raises(ValueError, match="expected 1"):
+            varint_decode(np.empty(0, np.uint8), count=1)
+
+    def test_rejects_overlong_varint(self):
+        # 10 continuation-bit bytes then a terminator: wider than any int64
+        bad = np.full(11, 0x81, dtype=np.uint8)
+        bad[-1] = 0x01
+        with pytest.raises(ValueError, match="longer than"):
+            varint_decode(bad)
+
+
+# --------------------------------------------------------------- adjacency
+class TestAdjacencyCodec:
+    @pytest.mark.parametrize("block_cap", (1, 2, 7, DEFAULT_BLOCK_CAP, 1000))
+    def test_roundtrip_random_rows(self, block_cap):
+        rng = np.random.default_rng(block_cap)
+        flat, degs = _sorted_rows(rng, 60)
+        data, row_bytes = encode_adjacency(flat, degs, block_cap)
+        assert int(row_bytes.sum()) == data.shape[0]
+        off = np.zeros(degs.shape[0] + 1, np.int64)
+        np.cumsum(row_bytes, out=off[1:])
+        out = decode_adjacency(data, degs, block_cap, row_byte_off=off)
+        assert np.array_equal(out, flat)
+
+    def test_empty_rows_cost_zero_bytes(self):
+        flat = np.array([4, 9, 2], dtype=np.int64)
+        degs = np.array([0, 2, 0, 1, 0], dtype=np.int64)
+        data, row_bytes = encode_adjacency(flat, degs)
+        assert np.array_equal(row_bytes[degs == 0], [0, 0, 0])
+        assert np.array_equal(decode_adjacency(data, degs), flat)
+
+    def test_rejects_unsorted_row(self):
+        flat = np.array([5, 3], dtype=np.int64)  # decreasing
+        degs = np.array([2], dtype=np.int64)
+        with pytest.raises(ValueError, match="strictly sorted"):
+            encode_adjacency(flat, degs)
+
+    def test_rejects_duplicate_in_row(self):
+        flat = np.array([3, 3], dtype=np.int64)  # delta 0
+        degs = np.array([2], dtype=np.int64)
+        with pytest.raises(ValueError, match="strictly sorted"):
+            encode_adjacency(flat, degs)
+
+    def test_rejects_degs_flat_mismatch(self):
+        with pytest.raises(ValueError, match="degs sums"):
+            encode_adjacency(
+                np.array([1, 2], np.int64), np.array([3], np.int64)
+            )
+
+    def test_rejects_bad_block_cap(self):
+        with pytest.raises(ValueError, match="block_cap"):
+            encode_adjacency(np.empty(0, np.int64), np.empty(0, np.int64), 0)
+
+    def test_offset_index_catches_shifted_rows(self):
+        # a corrupt varint that changes byte widths shifts every later row;
+        # the row_byte_off cross-check must refuse to decode
+        flat = np.array([200, 300, 400, 7, 9], dtype=np.int64)
+        degs = np.array([3, 2], dtype=np.int64)
+        data, row_bytes = encode_adjacency(flat, degs)
+        off = np.zeros(3, np.int64)
+        np.cumsum(row_bytes, out=off[1:])
+        bad = data.copy()
+        # 200 encodes as 2 bytes; rewrite to a 1-byte value => widths shift
+        one_byte, _ = varint_encode(np.array([5], np.int64))
+        bad = np.concatenate([one_byte, data[2:]])
+        with pytest.raises(ValueError):
+            decode_adjacency(bad, degs, row_byte_off=off)
+
+
+# ----------------------------------------------- property tests (hypothesis)
+if HAS_HYPOTHESIS:
+    from hypothesis import given, settings, strategies as st
+
+    @st.composite
+    def adjacency_rows(draw):
+        num_rows = draw(st.integers(min_value=1, max_value=20))
+        seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+        rng = np.random.default_rng(seed)
+        return _sorted_rows(rng, num_rows, max_id=2**40, max_deg=300)
+
+    class TestCodecProperties:
+        @settings(max_examples=60, deadline=None)
+        @given(
+            vals=st.lists(
+                st.integers(min_value=0, max_value=2**63 - 1),
+                max_size=200,
+            )
+        )
+        def test_varint_roundtrip(self, vals):
+            arr = np.array(vals, dtype=np.int64)
+            buf, nb = varint_encode(arr)
+            out, _ = varint_decode(buf, count=arr.shape[0])
+            assert np.array_equal(out, arr)
+
+        @settings(max_examples=40, deadline=None)
+        @given(
+            rows=adjacency_rows(),
+            block_cap=st.integers(min_value=1, max_value=128),
+        )
+        def test_adjacency_roundtrip(self, rows, block_cap):
+            flat, degs = rows
+            data, row_bytes = encode_adjacency(flat, degs, block_cap)
+            off = np.zeros(degs.shape[0] + 1, np.int64)
+            np.cumsum(row_bytes, out=off[1:])
+            out = decode_adjacency(data, degs, block_cap, row_byte_off=off)
+            assert np.array_equal(out, flat)
+
+        @settings(max_examples=30, deadline=None)
+        @given(
+            rows=adjacency_rows(),
+            cut=st.integers(min_value=1, max_value=64),
+        )
+        def test_truncated_data_never_decodes_silently(self, rows, cut):
+            flat, degs = rows
+            data, _ = encode_adjacency(flat, degs)
+            if data.shape[0] == 0:
+                return
+            cut = min(cut, data.shape[0])
+            with pytest.raises(ValueError):
+                decode_adjacency(data[:-cut], degs)
+else:  # pragma: no cover - exercised only without hypothesis
+
+    class TestCodecProperties:
+        def test_property_suite_needs_hypothesis(self):
+            pytest.importorskip("hypothesis")
+
+
+# ------------------------------------------------------------- v2 file format
+@pytest.fixture(scope="module")
+def graph():
+    return rmat_graph(4000, avg_degree=12, seed=11)
+
+
+@pytest.fixture(scope="module")
+def v2_bin(graph, tmp_path_factory):
+    path = tmp_path_factory.mktemp("v2") / "graph.bin"
+    convert_csr(graph, path)  # v2 is the converter default
+    return str(path)
+
+
+class TestV2Format:
+    def test_v2_decodes_bit_identical(self, graph, v2_bin):
+        ext = ExternalCSRGraph(v2_bin)
+        assert ext.format_version == FORMAT_VERSION_V2
+        assert np.array_equal(np.asarray(ext.indptr), graph.indptr)
+        assert np.array_equal(np.asarray(ext.indices), graph.indices)
+        # per-row and slice reads agree with the resident CSR too
+        for v in (0, 1, 17, graph.num_vertices - 1):
+            lo, hi = graph.indptr[v], graph.indptr[v + 1]
+            assert np.array_equal(ext.indices[lo:hi], graph.indices[lo:hi])
+
+    def test_v1_files_still_load(self, graph, tmp_path):
+        path = tmp_path / "v1.bin"
+        # writer default stays v1
+        write_external_csr(path, graph.indptr, graph.indices)
+        ext = ExternalCSRGraph(path)
+        assert ext.format_version == FORMAT_VERSION
+        assert np.array_equal(np.asarray(ext.indices), graph.indices)
+        assert ext.nbytes_compressed == 0
+
+    def test_compression_ratio_on_power_law(self, graph, v2_bin):
+        # acceptance bar: >= 1.4x on power-law (R-MAT) graphs
+        file_bytes = os.path.getsize(v2_bin)
+        raw = raw_file_bytes(graph.num_vertices, graph.indices.shape[0])
+        assert raw / file_bytes >= 1.4
+
+    def test_decode_accounting_advances(self, v2_bin):
+        ext = ExternalCSRGraph(v2_bin)
+        before = ext.indices.decode_calls
+        _ = ext.indices[int(ext.indptr[0]):int(ext.indptr[10])]
+        assert ext.indices.decode_calls > before
+        assert ext.indices.decode_seconds >= 0.0
+
+    def test_corrupt_data_region_rejected(self, graph, v2_bin, tmp_path):
+        data = bytearray(open(v2_bin, "rb").read())
+        # flip continuation bits across the tail of the varint data region
+        for i in range(len(data) - 64, len(data)):
+            data[i] |= 0x80
+        bad = tmp_path / "bad.bin"
+        bad.write_bytes(bytes(data))
+        ext = ExternalCSRGraph(bad)
+        with pytest.raises(ValueError):
+            np.asarray(ext.indices)
+
+    def test_truncated_v2_rejected(self, v2_bin, tmp_path):
+        data = open(v2_bin, "rb").read()
+        bad = tmp_path / "short.bin"
+        bad.write_bytes(data[:-16])
+        with pytest.raises(ValueError, match="truncated"):
+            ExternalCSRGraph(bad)
+
+    def test_bad_header_geometry_rejected(self, v2_bin, tmp_path):
+        data = bytearray(open(v2_bin, "rb").read())
+        # block_cap=0 (header offset 40) is never valid for a v2 file
+        struct.pack_into("<I", data, 40, 0)
+        bad = tmp_path / "cap0.bin"
+        bad.write_bytes(bytes(data))
+        with pytest.raises(ValueError, match="block_cap"):
+            ExternalCSRGraph(bad)
+
+
+# --------------------------------------------------------- parallel converter
+class TestParallelConverter:
+    def _edges(self, tmp_path, n=3000, seed=5):
+        g = rmat_graph(n, avg_degree=10, seed=seed)
+        path = tmp_path / "edges.npy"
+        np.save(path, g.edges_array())
+        return g, str(path)
+
+    def test_workers_do_not_change_bytes(self, tmp_path):
+        g, edges = self._edges(tmp_path)
+        outs = []
+        for w in (1, 4):
+            out = tmp_path / f"w{w}.bin"
+            stats = convert_edge_list(
+                edges, out, num_vertices=g.num_vertices, max_workers=w,
+                chunk_edges=4096,
+            )
+            assert stats["format_version"] == FORMAT_VERSION_V2
+            outs.append(out.read_bytes())
+        assert outs[0] == outs[1]  # byte-identical output file
+
+    def test_parallel_output_matches_resident(self, tmp_path):
+        g, edges = self._edges(tmp_path)
+        out = tmp_path / "par.bin"
+        convert_edge_list(
+            edges, out, num_vertices=g.num_vertices, max_workers=4,
+            chunk_edges=4096,
+        )
+        ext = ExternalCSRGraph(out)
+        assert np.array_equal(np.asarray(ext.indptr), g.indptr)
+        assert np.array_equal(np.asarray(ext.indices), g.indices)
+
+    def test_failure_leaves_no_partial_files(self, tmp_path, monkeypatch):
+        g, edges = self._edges(tmp_path)
+        out = tmp_path / "fail.bin"
+        scratch = tmp_path / "scratch"
+        scratch.mkdir()
+        from repro.graph import external as ext_mod
+
+        def boom(*a, **kw):
+            raise RuntimeError("injected compression failure")
+
+        monkeypatch.setattr(ext_mod, "_encode_row_range", boom)
+        with pytest.raises(RuntimeError, match="injected"):
+            convert_edge_list(
+                edges, out, num_vertices=g.num_vertices,
+                tmp_dir=str(scratch),
+            )
+        assert not out.exists()  # no partial graph file
+        assert list(scratch.iterdir()) == []  # all spill runs cleaned up
+
+
+# ---------------------------------------------------------------- prefetcher
+class TestBatchPrefetcher:
+    def test_results_in_submission_order(self):
+        stats = PrefetchStats()
+        pf = BatchPrefetcher(lambda x: x * x, range(20), stats=stats)
+        assert list(pf) == [x * x for x in range(20)]
+        assert stats.hits + stats.misses == 20
+        assert stats.decode_wall_s >= 0.0
+
+    def test_slow_consumer_hits(self):
+        stats = PrefetchStats()
+        pf = BatchPrefetcher(lambda x: x, range(5), stats=stats)
+        out = []
+        for v in pf:
+            time.sleep(0.01)  # consumer slower than fetch => decoded ahead
+            out.append(v)
+        assert out == list(range(5))
+        assert stats.hits >= 3
+        assert 0.0 <= stats.hit_rate <= 1.0
+
+    def test_fetch_exception_surfaces(self):
+        def fetch(x):
+            if x == 3:
+                raise KeyError("boom")
+            return x
+
+        pf = BatchPrefetcher(fetch, range(6), depth=1)
+        try:
+            assert next(pf) == 0
+            assert next(pf) == 1
+            assert next(pf) == 2
+            with pytest.raises(KeyError):
+                next(pf)
+        finally:
+            pf.close()
+
+    def test_close_is_idempotent_and_stops_work(self):
+        started = threading.Event()
+
+        def fetch(x):
+            started.wait(1.0)
+            return x
+
+        pf = BatchPrefetcher(fetch, range(100), depth=2)
+        started.set()
+        assert next(pf) == 0
+        pf.close()
+        pf.close()  # second close is a no-op
+        with pytest.raises(StopIteration):
+            next(pf)
+
+    def test_rejects_bad_depth(self):
+        with pytest.raises(ValueError, match="depth"):
+            BatchPrefetcher(lambda x: x, range(3), depth=0)
+
+    def test_telemetry_shape(self):
+        stats = PrefetchStats()
+        stats.record_wait(0.5, hit=True)
+        stats.record_wait(0.25, hit=False)
+        stats.record_decode(1.5)
+        tel = stats.to_telemetry()
+        assert tel == {
+            "prefetch_hit_rate": 0.5,
+            "prefetch_wait_s": 0.75,
+            "decode_wall_s": 1.5,
+        }
+
+
+# -------------------------------------------------------- prefetch == inline
+class TestPrefetchParity:
+    @pytest.mark.parametrize("algo,params", [
+        ("fennel", None),
+        ("cuttana", None),
+        ("cuttana-parallel", {"num_shards": 4}),
+        ("fennel-parallel", {"num_shards": 4}),
+    ])
+    def test_on_off_auto_bit_identical(self, graph, v2_bin, algo, params):
+        ext = ExternalCSRGraph(v2_bin)
+        outs = {}
+        for mode in ("on", "off", "auto"):
+            p = dict(params or {}, prefetch=mode)
+            spec = PartitionSpec(
+                algo=algo, k=6, balance_mode="edge", order="random",
+                seed=2, params=p,
+            )
+            outs[mode] = partition(ext, spec).assignment
+        assert np.array_equal(outs["on"], outs["off"])
+        assert np.array_equal(outs["on"], outs["auto"])
+        # and the mapped stream matches the fully resident run
+        spec = PartitionSpec(
+            algo=algo, k=6, balance_mode="edge", order="random",
+            seed=2, params=params,
+        )
+        assert np.array_equal(outs["auto"], partition(graph, spec).assignment)
+
+    def test_mapped_run_reports_prefetch_telemetry(self, v2_bin):
+        ext = ExternalCSRGraph(v2_bin)
+        result = partition(ext, PartitionSpec(algo="fennel", k=4))
+        tel = result.telemetry
+        assert 0.0 <= tel["prefetch_hit_rate"] <= 1.0
+        assert tel["decode_wall_s"] >= 0.0
+        assert tel["compressed_graph_bytes"] > 0
+
+    def test_resident_auto_reports_no_prefetch_telemetry(self, graph):
+        result = partition(graph, PartitionSpec(algo="fennel", k=4))
+        assert "prefetch_hit_rate" not in result.telemetry
+        assert result.telemetry["compressed_graph_bytes"] == 0
+
+
+# ------------------------------------------------------------ knob threading
+class TestPrefetchKnob:
+    def test_spec_rejects_bad_mode(self):
+        with pytest.raises(ValueError, match="prefetch"):
+            PartitionSpec(
+                algo="fennel", k=4, params={"prefetch": "sometimes"}
+            )
+
+    def test_spec_round_trips_prefetch(self):
+        spec = PartitionSpec(
+            algo="cuttana-parallel", k=4,
+            params={"num_shards": 2, "prefetch": "off"},
+        )
+        again = PartitionSpec.from_json(spec.to_json())
+        assert again == spec
+        assert again.params.prefetch == "off"
+
+    def test_cli_prefetch_flag(self, v2_bin, tmp_path):
+        from repro.api.cli import main as cli_main
+
+        spec_path = tmp_path / "spec.json"
+        spec_path.write_text(json.dumps({"algo": "fennel", "k": 4}))
+        out = tmp_path / "report.json"
+        rc = cli_main([
+            "partition", "--spec", str(spec_path), "--graph", v2_bin,
+            "--prefetch", "off", "--out", str(out),
+        ])
+        assert rc == 0
+        report = json.loads(out.read_text())
+        assert report["spec"]["params"]["prefetch"] == "off"
+
+    def test_cli_prefetch_rejected_for_knobless_algo(self, v2_bin, tmp_path):
+        from repro.api.cli import main as cli_main
+
+        spec_path = tmp_path / "spec.json"
+        spec_path.write_text(json.dumps({"algo": "hash", "k": 4}))
+        with pytest.raises(SystemExit, match="prefetch"):
+            cli_main([
+                "partition", "--spec", str(spec_path), "--graph", v2_bin,
+                "--prefetch", "on",
+            ])
