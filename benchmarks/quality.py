@@ -8,7 +8,10 @@ from benchmarks.common import emit
 from repro.api import PartitionSpec, partition
 from repro.graph.generators import load_dataset
 
-PARTITIONERS = ["cuttana", "fennel", "heistream", "ldg"]
+PARTITIONERS = [
+    "cuttana", "cuttana-buffcut", "cluster+cuttana", "fennel", "heistream",
+    "ldg",
+]
 DATASETS = ["social-s", "web-s", "road-s", "ldbc-s"]
 
 
@@ -25,10 +28,15 @@ def run(k: int = 8, datasets=None, order: str = "random", seed: int = 0):
                 result = partition(graph, spec)
                 rep = result.quality()
                 seconds = result.timings["total_s"]
-                rows.append(dict(dataset=ds, balance=balance, algo=name,
-                                 seconds=seconds, spec=spec.to_dict(), **rep))
+                # explicit bench key: the trajectory comparator matches rows
+                # by it - without one, every dataset's row would collapse
+                # onto the same "quality/<algo>" identity
+                bench = f"quality/{ds}/{balance}/{name}"
+                rows.append(dict(bench=bench, dataset=ds, balance=balance,
+                                 algo=name, seconds=seconds,
+                                 spec=spec.to_dict(), **rep))
                 emit(
-                    f"quality/{ds}/{balance}/{name}",
+                    bench,
                     seconds * 1e6,
                     f"edge_cut={rep['edge_cut']:.4f};cv={rep['comm_volume']:.4f};"
                     f"edge_imb={rep['edge_imbalance']:.2f}",

@@ -94,12 +94,22 @@ def main() -> None:
         "substrate": _suite("substrate"),
         "roofline": _suite("roofline"),
     }
-    only = set(args.only.split(",")) if args.only else None
+    # --only runs suites in the order GIVEN: peak_rss_mb rows report the
+    # process-lifetime high-water mark (ru_maxrss cannot be reset), so a
+    # memory-measuring suite (outofcore) must be able to run before the
+    # allocation-heavy ones (quality loads every dataset) - CI's
+    # "scaling,outofcore,serving,quality" relies on this
+    if args.only:
+        names = args.only.split(",")
+        unknown = [n for n in names if n not in suites]
+        if unknown:
+            ap.error(f"unknown suite(s) {unknown}; known: {sorted(suites)}")
+    else:
+        names = list(suites)
     report: dict = {"full": args.full, "suites": {}}
     t0 = time.time()
-    for name, fn in suites.items():
-        if only and name not in only:
-            continue
+    for name in names:
+        fn = suites[name]
         print(f"# === {name} ===", flush=True)
         try:
             rows = fn()

@@ -4,7 +4,9 @@
 compares such a report against a committed baseline (repo-root
 ``BENCH_partition.json``) and flags **regressions**:
 
-* quality metrics (``edge_cut``) worse than ``baseline * (1 + tolerance)``;
+* quality metrics (``edge_cut``, ``comm_volume`` - the paper's two headline
+  quality numbers, lambda_EC and lambda_CV) worse than
+  ``baseline * (1 + tolerance)``;
 * latency metrics (``stream_seconds``, ``convert_seconds``, and the serving
   suite's deterministic ``p99_sim_ms`` tail) worse than
   ``baseline * (1 + latency_tolerance)`` - wall clocks are noisier than the
@@ -49,7 +51,7 @@ __all__ = [
 # that re-materializes the graph in RAM fails the trajectory even when wall
 # clocks look fine. superstep_ms (mean per-superstep wall of the sharded
 # engines) is a wall clock and gates at the loose latency tolerance.
-QUALITY_METRICS = ("edge_cut",)
+QUALITY_METRICS = ("edge_cut", "comm_volume")
 LATENCY_METRICS = (
     "stream_seconds",
     "convert_seconds",

@@ -30,12 +30,14 @@ __all__ = [
     "FennelAlgoParams",
     "LDGAlgoParams",
     "CuttanaAlgoParams",
+    "CuttanaBuffcutAlgoParams",
     "CuttanaParallelAlgoParams",
     "FennelParallelAlgoParams",
     "CuttanaBatchedAlgoParams",
     "HeiStreamAlgoParams",
     "RestreamAlgoParams",
     "HDRFAlgoParams",
+    "ClusterAlgoParams",
 ]
 
 # common spec fields a partitioner accepts as keyword arguments
@@ -63,7 +65,9 @@ class LDGAlgoParams:
 
 @dataclasses.dataclass(frozen=True)
 class CuttanaAlgoParams:
-    """CUTTANA Algorithm 1 + phase-2 knobs (paper §III)."""
+    """CUTTANA Algorithm 1 + phase-2 knobs (paper §III). ``strategy``
+    selects the buffer-eviction priority (:mod:`repro.core.priority`);
+    ``"eq6"`` is the paper's Eq. 6."""
 
     d_max: int = 1000
     max_qsize: int | None = None
@@ -75,6 +79,41 @@ class CuttanaAlgoParams:
     max_moves: int | None = None
     chunk: int = 512
     prefetch: str = "auto"
+    strategy: str = "eq6"
+
+
+@dataclasses.dataclass(frozen=True)
+class CuttanaBuffcutAlgoParams:
+    """BuffCut-style prioritized buffered streaming: CUTTANA's engine with a
+    non-Eq.-6 eviction priority (``"gain"`` delayed-decision margin scoring
+    or ``"completeness"`` neighbourhood-completeness; ``"eq6"`` is rejected -
+    that spec spells ``algo="cuttana"``)."""
+
+    d_max: int = 1000
+    strategy: str = "gain"
+    max_qsize: int | None = None
+    theta: float = 1.0
+    subparts_per_partition: int | None = None
+    use_refinement: bool = True
+    thresh: float = 0.0
+    max_moves: int | None = None
+    chunk: int = 512
+    prefetch: str = "auto"
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterAlgoParams:
+    """Streaming-clustering coarsening prepass (:mod:`repro.core.cluster`)
+    around an engine base partitioner: ``hub_degree`` keeps hubs as
+    singleton supervertices, ``cluster_cap_frac`` bounds each cluster to a
+    fraction of one partition's mass."""
+
+    hub_degree: int = 1000
+    cluster_cap_frac: float = 0.1
+    use_refinement: bool = True
+    thresh: float = 0.0
+    subparts_per_partition: int | None = None
+    chunk: int = 512
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,6 +137,7 @@ class CuttanaParallelAlgoParams:
     chunk: int = 512
     max_workers: int = 0
     prefetch: str = "auto"
+    strategy: str = "eq6"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -242,6 +282,25 @@ def _register_all() -> None:
             description="CUTTANA: prioritized buffered streaming + coarsened refinement",
         ),
         PartitionerInfo(
+            "cuttana-buffcut", "repro.core.cuttana:partition_buffcut", "edge-cut",
+            "buffered", "engine", both, _STREAM_COMMON,
+            CuttanaBuffcutAlgoParams, telemetry=True,
+            description="BuffCut-style prioritized buffered streaming "
+                        "(gain/completeness eviction priorities)",
+        ),
+        PartitionerInfo(
+            "cluster+cuttana", "repro.core.cluster:partition_cluster_cuttana",
+            "edge-cut", "buffered", "engine", both, _STREAM_COMMON,
+            ClusterAlgoParams, telemetry=True,
+            description="streaming-clustering coarsening prepass around CUTTANA",
+        ),
+        PartitionerInfo(
+            "cluster+fennel", "repro.core.cluster:partition_cluster_fennel",
+            "edge-cut", "immediate", "engine", both, _STREAM_COMMON,
+            ClusterAlgoParams, telemetry=True,
+            description="streaming-clustering coarsening prepass around FENNEL",
+        ),
+        PartitionerInfo(
             "cuttana-batched", "repro.core.cuttana_batched:partition_batched",
             "edge-cut", "immediate", "engine", both, _STREAM_COMMON,
             CuttanaBatchedAlgoParams, telemetry=True,
@@ -306,7 +365,7 @@ def _register_all() -> None:
         PartitionerInfo(
             "cuttana-legacy", "repro.core.legacy:cuttana_partition", "edge-cut",
             "buffered", "legacy", both, _STREAM_COMMON, CuttanaAlgoParams,
-            forward_exclude=("chunk", "prefetch"),
+            forward_exclude=("chunk", "prefetch", "strategy"),
             description="seed per-vertex CUTTANA loop",
         ),
         PartitionerInfo(

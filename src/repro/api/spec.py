@@ -19,6 +19,16 @@ __all__ = ["PartitionSpec", "STREAM_ORDERS"]
 
 STREAM_ORDERS = ("natural", "random", "bfs", "dfs")
 _BALANCE_MODES = ("vertex", "edge")
+# buffer-eviction strategies (mirrors repro.core.priority.BUFFER_STRATEGIES;
+# duplicated literally so the registry layer stays import-cycle-free - the
+# two tuples are pinned equal in tests/test_priority.py). cuttana-buffcut is
+# *defined* as the prioritized variant (eq6 spells algo="cuttana"), and the
+# preserved seed loop only implements Eq. 6.
+_BUFFER_STRATEGIES = ("eq6", "completeness", "gain")
+_STRATEGY_CHOICES = {
+    "cuttana-buffcut": ("completeness", "gain"),
+    "cuttana-legacy": ("eq6",),
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -244,5 +254,21 @@ def _check_param_types(info: PartitionerInfo, block: Any):
             raise ValueError(
                 f"{info.name!r} param 'prefetch' must be one of "
                 f"'auto', 'on', 'off', got {value!r}"
+            )
+        if field.name == "strategy":
+            allowed = _STRATEGY_CHOICES.get(info.name, _BUFFER_STRATEGIES)
+            if value not in allowed:
+                raise ValueError(
+                    f"{info.name!r} param 'strategy' must be one of "
+                    f"{allowed}, got {value!r}"
+                )
+        if field.name == "hub_degree" and value < 2:
+            raise ValueError(
+                f"{info.name!r} param 'hub_degree' must be >= 2, got {value!r}"
+            )
+        if field.name == "cluster_cap_frac" and not (0 < value <= 1):
+            raise ValueError(
+                f"{info.name!r} param 'cluster_cap_frac' must be in (0, 1], "
+                f"got {value!r}"
             )
     return block

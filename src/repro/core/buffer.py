@@ -17,6 +17,14 @@ this is what lets the buffered placement policy in
 per-vertex is stored outside the flat arrays; without a graph (standalone
 use, e.g. property tests) the neighbour arrays passed to :meth:`push` are
 kept in a side table.
+
+The *scoring* is delegated to a pluggable :class:`~repro.core.priority.
+BufferPriority` strategy (``priority=``). The default is
+:class:`~repro.core.priority.Eq6Priority`, which computes exactly the
+expressions above - the legacy ``PriorityBuffer(capacity, d_max, theta)``
+constructor is preserved and bit-identical. Strategies with
+``tracks_parts`` additionally receive partition ids through
+``push(..., nbr_parts=...)`` / ``notify_many(..., parts=...)``.
 """
 from __future__ import annotations
 
@@ -24,12 +32,25 @@ import heapq
 
 import numpy as np
 
+from repro.core.priority import BufferPriority, Eq6Priority
+
 
 class PriorityBuffer:
-    def __init__(self, capacity: int, d_max: int, theta: float = 1.0, graph=None):
+    def __init__(
+        self,
+        capacity: int,
+        d_max: int | None = None,
+        theta: float = 1.0,
+        graph=None,
+        priority: BufferPriority | None = None,
+    ):
+        if priority is None:
+            priority = Eq6Priority(1 if d_max is None else d_max, theta)
         self.capacity = int(capacity)
-        self.d_max = max(int(d_max), 1)
-        self.theta = float(theta)
+        self.priority = priority
+        # legacy attribute surface (tests and telemetry read these)
+        self.d_max = priority.d_max
+        self.theta = priority.theta
         self._heap: list[tuple[float, int, int]] = []  # (-score, v, version)
         self._size = 0
         if graph is not None:
@@ -77,10 +98,16 @@ class PriorityBuffer:
 
     def score(self, v: int) -> float:
         deg = int(self._deg[v])
-        return deg / self.d_max + self.theta * int(self._assigned[v]) / max(deg, 1)
+        return self.priority.score_counts(v, deg, int(self._assigned[v]))
 
     # ------------------------------------------------------------------ ops
-    def push(self, v: int, nbrs: np.ndarray | None = None, assigned_count: int = 0) -> None:
+    def push(
+        self,
+        v: int,
+        nbrs: np.ndarray | None = None,
+        assigned_count: int = 0,
+        nbr_parts: np.ndarray | None = None,
+    ) -> None:
         v = int(v)
         assert not self.contains(v)
         self._grow(v + 1)
@@ -90,6 +117,8 @@ class PriorityBuffer:
             self._deg[v] = nbrs.shape[0]
         self._in[v] = True
         self._assigned[v] = int(assigned_count)
+        if self.priority.tracks_parts:
+            self.priority.on_push(v, nbr_parts)
         heapq.heappush(self._heap, (-self.score(v), v, int(self._version[v])))
         self._size += 1
 
@@ -106,19 +135,34 @@ class PriorityBuffer:
         heapq.heappush(self._heap, (-self.score(v), v, int(self._version[v])))
         return False
 
-    def notify_many(self, vs: np.ndarray) -> list[int]:
+    def notify_many(self, vs: np.ndarray, parts=None) -> list[int]:
         """Vectorised :meth:`notify_assigned` over a placed vertex's whole
         neighbourhood. Bumps every buffered vertex in ``vs`` once per
         occurrence (duplicate entries are possible with ``dedupe=False``
         graphs); returns the now-complete ones in first-occurrence ``vs``
-        order WITHOUT removing them (the caller cascades)."""
+        order WITHOUT removing them (the caller cascades). ``parts`` - the
+        partition of the newly assigned neighbour, scalar or aligned with
+        ``vs`` - feeds partition-tracking strategies and is otherwise
+        ignored."""
         if self._size == 0 or vs.size == 0 or self._in.shape[0] == 0:
             return []
-        vs = vs[vs < self._in.shape[0]]
-        buffered = vs[self._in[vs]]
+        track = parts is not None and self.priority.tracks_parts
+        parts_arr = None
+        if track and not (np.isscalar(parts) or getattr(parts, "ndim", 1) == 0):
+            parts_arr = np.asarray(parts)
+        keep = vs < self._in.shape[0]
+        vs = vs[keep]
+        if parts_arr is not None:
+            parts_arr = parts_arr[keep]
+        inmask = self._in[vs]
+        buffered = vs[inmask]
         if buffered.size == 0:
             return []
         np.add.at(self._assigned, buffered, 1)
+        if track:
+            self.priority.on_notify(
+                buffered, parts if parts_arr is None else parts_arr[inmask]
+            )
         if buffered.size > 1:
             buffered = buffered[np.sort(np.unique(buffered, return_index=True)[1])]
         deg = self._deg[buffered]
@@ -127,8 +171,9 @@ class PriorityBuffer:
         live = buffered[~complete]
         if live.size:
             self._version[live] += 1
-            ld = deg[~complete]
-            sc = ld / self.d_max + (self.theta * asg[~complete]) / np.maximum(ld, 1)
+            sc = self.priority.score_counts_many(
+                live, deg[~complete], asg[~complete]
+            )
             heap = self._heap
             for s, w, ver in zip(
                 (-sc).tolist(), live.tolist(), self._version[live].tolist()
@@ -147,6 +192,8 @@ class PriorityBuffer:
         self._in[v] = False
         self._version[v] += 1
         self._size -= 1
+        if self.priority.tracks_parts:
+            self.priority.on_remove(v)
         return nbrs
 
     def pop_best(self) -> tuple[int, np.ndarray]:

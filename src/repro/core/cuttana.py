@@ -108,11 +108,16 @@ def partition(
     use_pallas: bool | None = None,
     interpret: bool = False,
     prefetch: str = "auto",
+    strategy: str = "eq6",
     telemetry: dict | None = None,
 ):
     """Full CUTTANA partitioner. Ablations: ``use_buffer=False`` /
     ``use_refinement=False`` reproduce the paper's Table III rows
     (both off == plain FENNEL with Eq. 7 scoring).
+
+    ``strategy`` selects the buffer-eviction priority
+    (:mod:`repro.core.priority`); the default ``"eq6"`` is the paper's
+    Eq. 6 and bit-identical to the pre-strategy-layer engine.
 
     ``telemetry`` (if given) receives engine counters, phase wall times, and
     refinement stats; ``return_detail=True`` is the compat flag that instead
@@ -136,7 +141,7 @@ def partition(
         seed=seed,
     )
     policy = (
-        BufferedPolicy(max_qsize, d_max, theta)
+        BufferedPolicy(max_qsize, d_max, theta, strategy=strategy)
         if use_buffer
         else ImmediatePolicy()
     )
@@ -192,6 +197,40 @@ def partition(
             phase2_seconds=phase2_s,
         )
     return part
+
+
+def partition_buffcut(
+    graph: CSRGraph,
+    k: int,
+    epsilon: float = 0.05,
+    balance_mode: str = "edge",
+    d_max: int = 1000,
+    strategy: str = "gain",
+    max_qsize: int | None = None,
+    theta: float = 1.0,
+    subparts_per_partition: int | None = None,
+    use_refinement: bool = True,
+    thresh: float = 0.0,
+    max_moves: int | None = None,
+    order: str = "natural",
+    seed: int = 0,
+    chunk: int = 512,
+    prefetch: str = "auto",
+    telemetry: dict | None = None,
+) -> np.ndarray:
+    """``cuttana-buffcut``: CUTTANA's engine with a prioritized (non-Eq.-6)
+    buffer-eviction strategy - ``"gain"`` (default) or ``"completeness"``.
+    The registry/spec layer rejects ``strategy="eq6"`` here (that spec
+    spells ``algo="cuttana"``); this entry point exists so the variant's
+    own defaults are the callable's defaults."""
+    return partition(
+        graph, k, epsilon=epsilon, balance_mode=balance_mode, d_max=d_max,
+        max_qsize=max_qsize, theta=theta,
+        subparts_per_partition=subparts_per_partition,
+        use_refinement=use_refinement, thresh=thresh, max_moves=max_moves,
+        order=order, seed=seed, chunk=chunk, prefetch=prefetch,
+        strategy=strategy, telemetry=telemetry,
+    )
 
 
 def refine_any(

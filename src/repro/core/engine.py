@@ -62,6 +62,7 @@ import numpy as np
 from repro.core.base import FennelParams, PartitionState
 from repro.core.buffer import PriorityBuffer
 from repro.core.executor import ShardPool
+from repro.core.priority import BufferStats, make_priority
 from repro.core.profile import SuperstepProfiler
 from repro.core.subpartition import SubPartitioner
 from repro.graph.csr import CSRGraph
@@ -494,28 +495,43 @@ class BufferedPolicy:
     immediately (Thm. 1); the rest enter the bounded priority buffer; on
     overflow the best-scored vertex is evicted and placed; placements bump
     buffered neighbours (vectorised through ``notify_many``) and fully-known
-    vertices cascade out immediately."""
+    vertices cascade out immediately.
 
-    def __init__(self, max_qsize: int, d_max: int, theta: float = 1.0):
+    ``strategy`` selects the eviction priority (:mod:`repro.core.priority`):
+    ``"eq6"`` (paper default, bit-identical to the pre-strategy engine),
+    ``"completeness"``, or ``"gain"``."""
+
+    def __init__(
+        self,
+        max_qsize: int,
+        d_max: int,
+        theta: float = 1.0,
+        strategy: str = "eq6",
+    ):
         self.max_qsize = int(max_qsize)
-        self.d_max = max(int(d_max), 1)
-        self.theta = float(theta)
+        self.priority_factory = lambda: make_priority(strategy, d_max, theta)
+        prio = self.priority_factory()  # validates name eagerly
+        self.strategy = prio.name
+        self.d_max = prio.d_max
+        self.theta = prio.theta
         self.buffer: PriorityBuffer | None = None
 
     def run(self, eng: "StreamEngine") -> None:
         state = eng.state
-        buf = PriorityBuffer(self.max_qsize, self.d_max, self.theta, graph=eng.graph)
+        prio = self.priority_factory()
+        buf = PriorityBuffer(self.max_qsize, graph=eng.graph, priority=prio)
         self.buffer = buf
         part_of = state.part_of
         d_max = self.d_max
-        evictions = drained = bypass = peak = 0
+        track = prio.tracks_parts
+        stats = BufferStats()
 
         def cascade(v: int, nbrs: np.ndarray) -> None:
             worklist = [(v, nbrs)]
             while worklist:
                 u, un = worklist.pop()
-                eng.place(u, un)
-                for w in buf.notify_many(un):
+                p = eng.place(u, un)
+                for w in buf.notify_many(un, p if track else None):
                     worklist.append((w, buf.remove(w)))
 
         # admission reads neighbour rows a chunk at a time so the prefetcher
@@ -528,30 +544,25 @@ class BufferedPolicy:
                     continue  # already placed via complete-eviction cascade
                 nbrs = views[i]
                 if nbrs.size >= d_max:
-                    bypass += 1
+                    stats.bypass += 1
                     cascade(v, nbrs)
                     continue
-                assigned = int((part_of[nbrs] != -1).sum())
+                nbr_parts = part_of[nbrs]
+                assigned = int((nbr_parts != -1).sum())
                 if assigned == nbrs.size and nbrs.size > 0:
                     cascade(v, nbrs)  # complete already
                     continue
-                buf.push(v, nbrs, assigned)
-                if len(buf) > peak:
-                    peak = len(buf)
+                buf.push(v, nbrs, assigned, nbr_parts if track else None)
+                stats.observe_len(len(buf))
                 if buf.full:
                     u, un = buf.pop_best()
-                    evictions += 1
+                    stats.evictions += 1
                     cascade(u, un)
         while len(buf):
             u, un = buf.pop_best()
-            drained += 1
+            stats.drained += 1
             cascade(u, un)
-        eng.telemetry.update(
-            buffer_evictions=evictions,
-            buffer_drained=drained,
-            buffer_peak=peak,
-            degree_bypass=bypass,
-        )
+        eng.telemetry.update(stats.to_telemetry(self.strategy))
 
 
 # ------------------------------------------------------------------ helpers
@@ -688,6 +699,7 @@ class _SuperstepRunner:
         sharded: ShardedStream,
         reassign: bool = False,
         need_cols: bool = False,
+        need_parts: bool = False,
     ):
         if not hasattr(eng.scorer, "affine_arrays"):
             raise ValueError(
@@ -702,6 +714,7 @@ class _SuperstepRunner:
         self.sharded = sharded
         self.reassign = reassign
         self.need_cols = need_cols
+        self.need_parts = need_parts
         state = eng.state
         self.k = state.k
         self.shard_of = sharded.shard_of(eng.graph.num_vertices)
@@ -982,7 +995,11 @@ class _SuperstepRunner:
 
         Returns the flat neighbour-id array of everything placed (the
         buffered policy notifies every shard buffer with it; only built
-        when ``need_cols``), or None when the superstep had no candidates.
+        when ``need_cols``; with ``need_parts`` a ``(cols, parts)`` pair
+        where ``parts[j]`` is the partition the owner of neighbour slot
+        ``j`` was just placed in - partition-tracking buffer strategies
+        feed it to ``notify_many``), or None when the superstep had no
+        candidates.
         """
         eng = self.eng
         state = eng.state
@@ -1086,7 +1103,18 @@ class _SuperstepRunner:
             parallel_wall=parallel_wall,
         )
         if self.need_cols:
-            return np.concatenate([p.cols for p in live])
+            cols_all = np.concatenate([p.cols for p in live])
+            if self.need_parts:
+                # partition of the *placer*, aligned with its neighbour slots
+                parts_all = np.concatenate(
+                    [
+                        assigned_flat[starts[s] : bounds[s]][p.rows]
+                        for s, p in enumerate(preps)
+                        if p is not None
+                    ]
+                )
+                return cols_all, parts_all
+            return cols_all
         return big
 
     def finalize_telemetry(self) -> None:
@@ -1170,16 +1198,28 @@ class ShardedBufferedPolicy:
     sequential :class:`BufferedPolicy` (bit-identical by construction).
     """
 
-    def __init__(self, num_shards: int, max_qsize: int, d_max: int, theta: float = 1.0):
+    def __init__(
+        self,
+        num_shards: int,
+        max_qsize: int,
+        d_max: int,
+        theta: float = 1.0,
+        strategy: str = "eq6",
+    ):
         self.num_shards = _check_num_shards(num_shards)
         self.max_qsize = int(max_qsize)
-        self.d_max = max(int(d_max), 1)
-        self.theta = float(theta)
+        prio = make_priority(strategy, d_max, theta)  # validates name eagerly
+        self.strategy = prio.name
+        self.tracks_parts = prio.tracks_parts
+        self.d_max = prio.d_max
+        self.theta = prio.theta
         self.buffers: list[PriorityBuffer] | None = None
 
     def run(self, eng: "StreamEngine") -> None:
         if self.num_shards == 1:
-            seq = BufferedPolicy(self.max_qsize, self.d_max, self.theta)
+            seq = BufferedPolicy(
+                self.max_qsize, self.d_max, self.theta, strategy=self.strategy
+            )
             seq.run(eng)
             self.buffers = [seq.buffer]
             eng.telemetry.update(
@@ -1191,10 +1231,15 @@ class ShardedBufferedPolicy:
         indptr, indices = graph.indptr, graph.indices
         part_of = eng.state.part_of
         sharded = ShardedStream.from_ids(eng.ids, num_shards)
-        runner = _SuperstepRunner(eng, sharded, need_cols=True)
+        track = self.tracks_parts
+        runner = _SuperstepRunner(eng, sharded, need_cols=True, need_parts=track)
         chunk = max(int(eng.config.chunk), 1)
         bufs = [
-            PriorityBuffer(self.max_qsize, self.d_max, self.theta, graph=graph)
+            PriorityBuffer(
+                self.max_qsize,
+                graph=graph,
+                priority=make_priority(self.strategy, self.d_max, self.theta),
+            )
             for _ in range(num_shards)
         ]
         self.buffers = bufs
@@ -1258,8 +1303,9 @@ class ShardedBufferedPolicy:
             evicted = drained_n = bypass_n = 0
             if take.shape[0]:
                 trows, tcols = texp
+                tparts = part_of[tcols]
                 asg = np.bincount(
-                    trows[part_of[tcols] != -1], minlength=take.shape[0]
+                    trows[tparts != -1], minlength=take.shape[0]
                 )
                 byp = tdegs >= d_max
                 comp = (~byp) & (asg == tdegs) & (tdegs > 0)
@@ -1267,6 +1313,9 @@ class ShardedBufferedPolicy:
                 al = asg.tolist()
                 bypl = byp.tolist()
                 compl = comp.tolist()
+                if track:
+                    toffs = np.zeros(take.shape[0] + 1, dtype=np.int64)
+                    np.cumsum(tdegs, out=toffs[1:])
                 for i in range(len(tl)):
                     if bypl[i]:
                         bypass_n += 1
@@ -1274,7 +1323,12 @@ class ShardedBufferedPolicy:
                     elif compl[i]:
                         cand.append(tl[i])
                     else:
-                        buf.push(tl[i], None, al[i])
+                        buf.push(
+                            tl[i],
+                            None,
+                            al[i],
+                            tparts[toffs[i] : toffs[i + 1]] if track else None,
+                        )
                 while buf.full:
                     u, _ = buf.pop_best()
                     evicted += 1
@@ -1293,17 +1347,17 @@ class ShardedBufferedPolicy:
                 evicted, drained_n, bypass_n, len(buf),
             )
 
-        def notify(s: int, placed_cols: np.ndarray):
+        def notify(s: int, placed_cols: np.ndarray, placed_parts=None):
             """Boundary: shard s's buffer learns about ALL placements.
             Mutates only shard s's buffer and pending slot."""
             buf = bufs[s]
             if not len(buf):
                 return
-            for w in buf.notify_many(placed_cols):
+            for w in buf.notify_many(placed_cols, placed_parts):
                 buf.remove(w)
                 pending[s].append(w)
 
-        evictions = drained = bypass = peak = 0
+        bstats = BufferStats()
         try:
             if prefetch_on:
                 prefetch_scans()
@@ -1320,11 +1374,10 @@ class ShardedBufferedPolicy:
                     prefetch_scans()
                 batches = [r[0] for r in results]
                 for _, ev, dr, by, blen in results:
-                    evictions += ev
-                    drained += dr
-                    bypass += by
-                    if blen > peak:
-                        peak = blen
+                    bstats.evictions += ev
+                    bstats.drained += dr
+                    bstats.bypass += by
+                    bstats.observe_len(blen)
                 if all(b.shape[0] == 0 for b in batches):
                     exhausted = all(
                         cursors[s] >= sharded.shards[s].shape[0]
@@ -1336,23 +1389,21 @@ class ShardedBufferedPolicy:
                     # no sync
                     runner.step += 1
                     continue
-                cols = runner.run_superstep(batches)
+                res = runner.run_superstep(batches)
+                cols, placed_parts = (
+                    res if track and res is not None else (res, None)
+                )
                 if cols is not None and cols.size:
                     t1 = time.perf_counter()
                     for f in [
-                        runner.pool.submit(notify, s, cols)
+                        runner.pool.submit(notify, s, cols, placed_parts)
                         for s in range(num_shards)
                     ]:
                         f.result()
                     runner.profile.add("merge", time.perf_counter() - t1)
         finally:
             runner.close()
-        eng.telemetry.update(
-            buffer_evictions=evictions,
-            buffer_drained=drained,
-            buffer_peak=peak,
-            degree_bypass=bypass,
-        )
+        eng.telemetry.update(bstats.to_telemetry(self.strategy))
         runner.finalize_telemetry()
 
 

@@ -82,10 +82,14 @@ def partition_parallel(
     use_pallas: bool | None = None,
     interpret: bool = False,
     prefetch: str = "auto",
+    strategy: str = "eq6",
     telemetry: dict | None = None,
 ) -> np.ndarray:
     """Shard-parallel CUTTANA: Algorithm 1 over ``num_shards`` interleaved
     shard cursors with bulk-synchronous supersteps, then phase-2 refinement.
+    ``strategy`` selects the shard buffers' eviction priority
+    (:mod:`repro.core.priority`; default Eq. 6, bit-identical to before the
+    strategy layer existed).
 
     ``num_shards=1`` is bit-identical to :func:`repro.core.cuttana.partition`
     under the same knobs; ``num_shards=0`` resolves through the auto-tuner
@@ -121,7 +125,7 @@ def partition_parallel(
         graph,
         state,
         FennelScorer(graph, k, params, balance_mode),
-        ShardedBufferedPolicy(num_shards, max_qsize, d_max, theta),
+        ShardedBufferedPolicy(num_shards, max_qsize, d_max, theta, strategy=strategy),
         subpartitioner=subp,
         order=order,
         seed=seed,

@@ -1,0 +1,195 @@
+"""Streaming-clustering coarsening prepass (repro.core.cluster).
+
+Invariants under test:
+
+* :func:`streaming_cluster` is a total assignment that respects the volume
+  and member-count caps for every multi-member cluster, keeps hubs as
+  singletons, and actually coarsens community graphs;
+* projection (``coarse_part[cluster_of]``) plus greedy repair yields a
+  total, in-range, *balanced* partition for both balance modes and both
+  registered bases;
+* determinism: same spec -> same assignment, bit for bit;
+* the spec/registry layer round-trips ``cluster+<algo>`` and validates the
+  prepass knobs.
+"""
+import numpy as np
+import pytest
+
+from repro.api import PartitionSpec, partition
+from repro.core.cluster import (
+    build_coarse_graph,
+    partition_cluster,
+    streaming_cluster,
+)
+from repro.graph import CSRGraph
+from repro.graph.generators import powerlaw_cluster_graph, rmat_graph
+from repro.graph.metrics import (
+    check_balance,
+    partition_edge_counts,
+    partition_vertex_counts,
+)
+from repro.graph.stream import stream_order
+
+
+@pytest.fixture(scope="module")
+def web_graph():
+    # preferential-attachment + id-locality: actual community structure,
+    # the regime the prepass is built for
+    return powerlaw_cluster_graph(3000, avg_degree=12, seed=4)
+
+
+# ----------------------------------------------------------------- clustering
+def test_streaming_cluster_invariants(web_graph):
+    g = web_graph
+    ids = stream_order(g, "random", seed=1)
+    k = 8
+    volume_cap = max(0.1 * g.indices.shape[0] / k, 1.0)
+    count_cap = max(int(0.1 * g.num_vertices / k), 1)
+    cluster_of, nc, vols = streaming_cluster(
+        g, ids, volume_cap, count_cap, hub_degree=200
+    )
+    # total assignment into [0, nc)
+    assert cluster_of.shape == (g.num_vertices,)
+    assert cluster_of.min() >= 0 and cluster_of.max() < nc
+    assert vols.shape == (nc,)
+    degrees = np.asarray(g.degrees, dtype=np.int64)
+    sizes = np.bincount(cluster_of, minlength=nc)
+    # volumes bookkeeping is exactly the member-degree sums
+    np.testing.assert_array_equal(
+        vols, np.bincount(cluster_of, weights=degrees.astype(float), minlength=nc)
+    )
+    # caps hold for every multi-member cluster (singletons may exceed the
+    # volume cap: a hub or isolated vertex is unsplittable)
+    multi = sizes > 1
+    assert (sizes[multi] <= count_cap).all()
+    assert (vols[multi] <= volume_cap + 1e-9).all()
+    # hubs stay singletons
+    hubs = np.flatnonzero(degrees >= 200)
+    if hubs.size:
+        assert (sizes[cluster_of[hubs]] == 1).all()
+    # on a community graph the pass must genuinely coarsen
+    assert nc < g.num_vertices / 2
+
+
+def test_streaming_cluster_volume_cap_binds():
+    # a star: the centre is a hub singleton, leaves share clusters only up
+    # to the caps
+    edges = np.stack(
+        [np.zeros(50, dtype=np.int64), np.arange(1, 51, dtype=np.int64)], axis=1
+    )
+    g = CSRGraph.from_edges(edges, num_vertices=51)
+    ids = np.arange(51, dtype=np.int64)
+    cluster_of, nc, vols = streaming_cluster(
+        g, ids, volume_cap=5.0, count_cap=5, hub_degree=10
+    )
+    sizes = np.bincount(cluster_of, minlength=nc)
+    assert sizes[cluster_of[0]] == 1  # centre (deg 50 >= hub_degree)
+    multi = sizes > 1
+    assert (vols[multi] <= 5.0).all()
+    assert (sizes[multi] <= 5).all()
+
+
+def test_build_coarse_graph_preserves_cross_edges(web_graph):
+    g = web_graph
+    ids = stream_order(g, "natural", seed=0)
+    cluster_of, nc, _ = streaming_cluster(g, ids, 500.0, 40, hub_degree=200)
+    coarse = build_coarse_graph(g, cluster_of, nc)
+    assert coarse.num_vertices == nc
+    # multiplicity preserved: coarse edge endpoints count original
+    # cross-cluster edges exactly (each undirected edge once)
+    cs = cluster_of[
+        np.repeat(np.arange(g.num_vertices), np.asarray(g.degrees, dtype=np.int64))
+    ]
+    cd = cluster_of[g.indices]
+    cross = int((cs != cd).sum()) // 2
+    assert coarse.indices.shape[0] // 2 == cross
+
+
+# ------------------------------------------------------------ full partitioner
+@pytest.mark.parametrize("base", ["cuttana", "fennel"])
+@pytest.mark.parametrize("balance", ["edge", "vertex"])
+def test_partition_cluster_total_and_balanced(web_graph, base, balance):
+    g = web_graph
+    k = 6
+    tele = {}
+    part = partition_cluster(
+        g, k, epsilon=0.05, balance_mode=balance, base=base,
+        order="random", seed=0, telemetry=tele,
+    )
+    assert part.shape == (g.num_vertices,)
+    assert part.dtype == np.int32
+    assert part.min() >= 0 and part.max() < k
+    if balance == "edge":
+        sizes = partition_edge_counts(g, part, k)
+        total = g.indices.shape[0]
+    else:
+        sizes = partition_vertex_counts(part, k)
+        total = g.num_vertices
+    assert check_balance(sizes, total, k, 0.05), sizes
+    assert tele["cluster_base"] == base
+    assert 0 < tele["clusters_found"] < g.num_vertices
+    assert 0 < tele["coarsening_ratio"] < 1
+    assert tele["coarse_edges"] > 0
+    assert tele["repair_moves"] >= 0
+
+
+def test_partition_cluster_deterministic(web_graph):
+    a = partition_cluster(web_graph, 4, order="random", seed=7)
+    b = partition_cluster(web_graph, 4, order="random", seed=7)
+    assert a.tobytes() == b.tobytes()
+
+
+def test_partition_cluster_rejects_bad_knobs(web_graph):
+    with pytest.raises(ValueError, match="unknown cluster base"):
+        partition_cluster(web_graph, 4, base="ldg")
+    with pytest.raises(ValueError, match="cluster_cap_frac"):
+        partition_cluster(web_graph, 4, cluster_cap_frac=0.0)
+
+
+def test_partition_cluster_no_refinement_path(web_graph):
+    tele = {}
+    part = partition_cluster(
+        web_graph, 4, use_refinement=False, order="natural", seed=0,
+        telemetry=tele,
+    )
+    assert part.shape == (web_graph.num_vertices,)
+    assert tele["refine_moves"] == 0
+
+
+def test_partition_cluster_k1_and_tiny():
+    g = rmat_graph(50, avg_degree=4, seed=0)
+    part = partition_cluster(g, 1)
+    assert (part == 0).all()
+    # isolated vertices: clustering and projection must still be total
+    edges = np.array([[0, 1]], dtype=np.int64)
+    g2 = CSRGraph.from_edges(edges, num_vertices=5)
+    part2 = partition_cluster(g2, 2, epsilon=1.0)
+    assert part2.shape == (5,)
+    assert part2.min() >= 0 and part2.max() < 2
+
+
+# ---------------------------------------------------------------- spec layer
+def test_cluster_spec_roundtrip_and_validation(web_graph):
+    spec = PartitionSpec(
+        algo="cluster+cuttana", k=4, order="random", seed=2,
+        params={"hub_degree": 150, "cluster_cap_frac": 0.2},
+    )
+    assert PartitionSpec.from_json(spec.to_json()) == spec
+    res = partition(web_graph, spec)
+    assert res.assignment.shape == (web_graph.num_vertices,)
+    assert res.telemetry["cluster_base"] == "cuttana"
+    with pytest.raises(ValueError, match="hub_degree"):
+        PartitionSpec(algo="cluster+cuttana", k=4, params={"hub_degree": 1})
+    with pytest.raises(ValueError, match="cluster_cap_frac"):
+        PartitionSpec(
+            algo="cluster+fennel", k=4, params={"cluster_cap_frac": 1.5}
+        )
+
+
+def test_cluster_fennel_through_api(web_graph):
+    res = partition(
+        web_graph, PartitionSpec(algo="cluster+fennel", k=4, order="random")
+    )
+    assert res.telemetry["cluster_base"] == "fennel"
+    sizes = partition_edge_counts(web_graph, res.assignment, 4)
+    assert check_balance(sizes, web_graph.indices.shape[0], 4, 0.05)

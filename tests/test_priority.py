@@ -1,0 +1,310 @@
+"""Buffer-priority strategy layer (repro.core.priority).
+
+Covers the three pillars of the refactor:
+
+* the **default strategy is the pre-refactor buffer**: ``strategy="eq6"``
+  reproduces the preserved seed loop (``cuttana-legacy``) bit-for-bit
+  across every stream order, and S=1 sharded == sequential for *every*
+  strategy;
+* the **heap machinery is strategy-agnostic**: a hypothesis property
+  drives random push / notify / pop interleavings against a
+  recompute-argmax reference model, per strategy;
+* the **spec layer mirrors the core**: the strategy-name tuples duplicated
+  into ``repro.api.spec`` (to stay import-cycle-free) are pinned equal to
+  the canonical ones here.
+"""
+import numpy as np
+import pytest
+
+try:  # hypothesis fuzzing is CI-installed; the seeded runs below always run
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+from repro.api import PartitionSpec, partition
+from repro.api import spec as spec_mod
+from repro.core.buffer import PriorityBuffer
+from repro.core.cuttana import partition as cuttana_partition
+from repro.core.engine import BufferedPolicy, ShardedBufferedPolicy
+from repro.core.parallel import partition_parallel
+from repro.core.priority import (
+    BUFFER_STRATEGIES,
+    BufferStats,
+    CompletenessPriority,
+    Eq6Priority,
+    GainPriority,
+    make_priority,
+)
+from repro.graph.generators import rmat_graph
+
+ALL_ORDERS = ("natural", "random", "bfs", "dfs")
+
+
+# ---------------------------------------------------------------- unit layer
+def test_spec_strategy_tuples_pinned_to_core():
+    # spec.py duplicates these literally (import-cycle-free); keep them honest
+    assert spec_mod._BUFFER_STRATEGIES == BUFFER_STRATEGIES
+    for algo, allowed in spec_mod._STRATEGY_CHOICES.items():
+        assert set(allowed) <= set(BUFFER_STRATEGIES), (algo, allowed)
+    assert spec_mod._STRATEGY_CHOICES["cuttana-legacy"] == ("eq6",)
+
+
+def test_make_priority_resolves_and_rejects():
+    assert isinstance(make_priority("eq6", 100), Eq6Priority)
+    assert isinstance(make_priority("completeness", 100), CompletenessPriority)
+    assert isinstance(make_priority("gain", 100), GainPriority)
+    with pytest.raises(ValueError, match="unknown buffer strategy"):
+        make_priority("nope", 100)
+    # strategies are stateful: every call must return a fresh instance
+    assert make_priority("gain", 10) is not make_priority("gain", 10)
+
+
+def test_eq6_expressions_are_the_legacy_ones():
+    # the exact IEEE-double expressions of the pre-refactor buffer
+    p = Eq6Priority(d_max=37, theta=1.5)
+    for deg, asg in [(0, 0), (1, 0), (5, 3), (40, 40), (7, 2)]:
+        assert p.score_counts(0, deg, asg) == deg / 37 + 1.5 * asg / max(deg, 1)
+    deg = np.array([0, 1, 5, 40, 7], dtype=np.int64)
+    asg = np.array([0, 0, 3, 40, 2], dtype=np.int64)
+    np.testing.assert_array_equal(
+        p.score_counts_many(np.arange(5), deg, asg),
+        deg / 37 + (1.5 * asg) / np.maximum(deg, 1),
+    )
+
+
+def test_completeness_delays_incomplete_hubs():
+    p = CompletenessPriority(d_max=100, theta=1.0)
+    hub_unknown = p.score_counts(0, deg=95, assigned=20)
+    small_known = p.score_counts(1, deg=10, assigned=9)
+    assert small_known > hub_unknown  # eq6 would order these the other way
+    eq6 = Eq6Priority(d_max=100, theta=1.0)
+    assert eq6.score_counts(0, 95, 20) > eq6.score_counts(1, 10, 9)
+
+
+def test_gain_margin_tracking():
+    p = GainPriority(d_max=10, theta=1.0)
+    # untracked vertex: falls back to the assigned count (Eq. 6)
+    assert p.score_counts(7, deg=5, assigned=3) == 5 / 10 + 3 / 5
+    # decisive neighbourhood (3 vs 0) outranks a split one (2 vs 2)
+    p.on_push(1, np.array([0, 0, 0, -1]))
+    p.on_push(2, np.array([0, 0, 1, 1]))
+    assert p._margin(1, 99) == 3.0
+    assert p._margin(2, 99) == 0.0
+    s = p.score_counts_many(
+        np.array([1, 2]), np.array([4, 4]), np.array([3, 4])
+    )
+    assert s[0] > s[1]
+    # notify (scalar part) shifts the margin; remove drops the tracking
+    p.on_notify(np.array([2]), 1)
+    assert p._margin(2, 99) == 1.0
+    p.on_remove(1)
+    assert p._margin(1, 6) == 6.0  # back to the fallback
+
+
+def test_gain_memory_bounded_by_buffer():
+    g = rmat_graph(400, avg_degree=8, seed=0)
+    prio = make_priority("gain", d_max=1000)
+    buf = PriorityBuffer(16, graph=g, priority=prio)
+    part = np.full(g.num_vertices, -1, dtype=np.int64)
+    for v in range(200):
+        nbrs = g.neighbors(v)
+        buf.push(v, assigned_count=0, nbr_parts=part[nbrs])
+        if buf.full:
+            w, _ = buf.pop_best()
+            part[w] = w % 4
+        assert len(prio._pc) <= 16  # counts exist only while buffered
+
+
+def test_buffer_stats_telemetry_keys():
+    s = BufferStats()
+    s.observe_len(3)
+    s.observe_len(2)
+    s.evictions += 5
+    t = s.to_telemetry("gain")
+    assert t == {
+        "buffer_evictions": 5,
+        "buffer_drained": 0,
+        "buffer_peak": 3,
+        "degree_bypass": 0,
+        "buffer_strategy": "gain",
+    }
+
+
+# -------------------------------------------------- heap-vs-reference model
+def _run_against_reference(strategy: str, seed: int) -> None:
+    """Drive random push / notify_many / pop_best interleavings and check
+    every pop and every completion list against a recompute-argmax model.
+
+    Valid oracle because every score change pushes a fresh versioned heap
+    entry: the live entry for a vertex always carries its current score, so
+    pop order must equal argmax by (score, -v) over buffered vertices.
+    """
+    rng = np.random.default_rng(seed)
+    n = 40
+    prio = make_priority(strategy, d_max=int(rng.integers(5, 50)), theta=1.0)
+    buf = PriorityBuffer(capacity=12, priority=prio)
+    model: dict[int, list] = {}  # v -> [deg, assigned]
+
+    def ref_score(v):
+        deg, asg = model[v]
+        return buf.priority.score_counts(v, deg, asg)
+
+    for _ in range(120):
+        op = rng.integers(0, 3)
+        if op == 0 and len(model) < 12:  # push
+            free = [v for v in range(n) if v not in model]
+            v = int(rng.choice(free))
+            deg = int(rng.integers(1, 8))
+            nbrs = rng.integers(0, n, size=deg).astype(np.int64)
+            parts = rng.integers(-1, 3, size=deg).astype(np.int64)
+            asg = int((parts >= 0).sum())
+            buf.push(v, nbrs=nbrs, assigned_count=asg, nbr_parts=parts)
+            model[v] = [deg, asg]
+        elif op == 1 and model:  # notify a random multiset of vertices
+            m = int(rng.integers(1, 6))
+            vs = rng.integers(0, n, size=m).astype(np.int64)
+            part = int(rng.integers(0, 3))
+            got_complete = buf.notify_many(vs, part)
+            # mirror: bump per occurrence, completions in first-occurrence order
+            expect = []
+            for v in vs.tolist():
+                if v in model:
+                    model[v][1] += 1
+            seen = set()
+            for v in vs.tolist():
+                if v in model and v not in seen:
+                    seen.add(v)
+                    if model[v][1] >= model[v][0]:
+                        expect.append(v)
+            assert got_complete == expect, (strategy, seed)
+            for v in expect:  # caller contract: completions are removed
+                buf.remove(v)
+                del model[v]
+        elif op == 2 and model:  # pop_best
+            best = max(model, key=lambda v: (ref_score(v), -v))
+            v, _nbrs = buf.pop_best()
+            assert v == best, (strategy, seed, ref_score(v), ref_score(best))
+            del model[v]
+    assert len(buf) == len(model)
+
+
+@pytest.mark.parametrize("strategy", BUFFER_STRATEGIES)
+@pytest.mark.parametrize("seed", [0, 1, 17, 123456, 2**31 - 1])
+def test_eviction_order_matches_reference_seeded(strategy, seed):
+    _run_against_reference(strategy, seed)
+
+
+if HAVE_HYPOTHESIS:
+
+    @pytest.mark.parametrize("strategy", BUFFER_STRATEGIES)
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_eviction_order_matches_reference_fuzz(strategy, seed):
+        _run_against_reference(strategy, seed)
+
+
+# -------------------------------------------------------------- parity layer
+@pytest.fixture(scope="module")
+def parity_graph():
+    return rmat_graph(3000, avg_degree=10, seed=5)
+
+
+@pytest.mark.parametrize("order", ALL_ORDERS)
+def test_default_strategy_matches_legacy_loop(parity_graph, order):
+    """strategy='eq6' (the default) must reproduce the preserved seed loop
+    byte-for-byte on every stream order - the refactor moved the scoring,
+    it must not have changed a single placement."""
+    spec_kw = dict(k=6, epsilon=0.05, balance_mode="edge", order=order, seed=2)
+    legacy = partition(parity_graph, PartitionSpec(algo="cuttana-legacy", **spec_kw))
+    default = partition(parity_graph, PartitionSpec(algo="cuttana", **spec_kw))
+    explicit = partition(
+        parity_graph,
+        PartitionSpec(algo="cuttana", params={"strategy": "eq6"}, **spec_kw),
+    )
+    np.testing.assert_array_equal(default.assignment, legacy.assignment)
+    assert default.assignment.tobytes() == explicit.assignment.tobytes()
+
+
+@pytest.mark.parametrize("strategy", BUFFER_STRATEGIES)
+def test_sharded_s1_matches_sequential_per_strategy(parity_graph, strategy):
+    """S=1 delegates to the sequential policy for every strategy."""
+    g = parity_graph
+    seq = cuttana_partition(
+        g, 4, epsilon=0.05, balance_mode="edge", order="random", seed=3,
+        strategy=strategy, use_refinement=False,
+    )
+    par = partition_parallel(
+        g, 4, epsilon=0.05, balance_mode="edge", order="random", seed=3,
+        num_shards=1, strategy=strategy, use_refinement=False,
+    )
+    np.testing.assert_array_equal(seq, par)
+
+
+def test_sharded_strategy_runs_multishard(parity_graph):
+    """S>=2 exercises the superstep need_parts plumbing for gain."""
+    g = parity_graph
+    for strategy in ("eq6", "gain"):
+        tele = {}
+        part = partition_parallel(
+            g, 4, epsilon=0.05, balance_mode="edge", order="random", seed=3,
+            num_shards=3, strategy=strategy, use_refinement=False,
+            telemetry=tele,
+        )
+        assert part.shape == (g.num_vertices,)
+        assert part.min() >= 0 and part.max() < 4
+        assert tele["buffer_strategy"] == strategy
+
+
+def test_policy_rejects_unknown_strategy():
+    with pytest.raises(ValueError, match="unknown buffer strategy"):
+        BufferedPolicy(64, d_max=100, strategy="bogus")
+    with pytest.raises(ValueError, match="unknown buffer strategy"):
+        ShardedBufferedPolicy(2, 64, d_max=100, strategy="bogus")
+
+
+# ---------------------------------------------------------------- spec layer
+def test_buffcut_spec_roundtrip_and_validation():
+    spec = PartitionSpec(algo="cuttana-buffcut", k=8, order="random")
+    assert spec.params.strategy == "gain"  # buffcut default
+    assert PartitionSpec.from_json(spec.to_json()) == spec
+    spec2 = PartitionSpec(
+        algo="cuttana-buffcut", k=8, params={"strategy": "completeness"}
+    )
+    assert PartitionSpec.from_json(spec2.to_json()) == spec2
+    # buffcut is *defined* as the prioritized variant: eq6 spells "cuttana"
+    with pytest.raises(ValueError, match="strategy"):
+        PartitionSpec(algo="cuttana-buffcut", k=8, params={"strategy": "eq6"})
+    with pytest.raises(ValueError, match="strategy"):
+        PartitionSpec(algo="cuttana", k=8, params={"strategy": "buffcut"})
+    with pytest.raises(ValueError, match="strategy"):
+        PartitionSpec(algo="cuttana-legacy", k=8, params={"strategy": "gain"})
+
+
+def test_buffcut_runs_and_reports_strategy(parity_graph):
+    res = partition(
+        parity_graph,
+        PartitionSpec(algo="cuttana-buffcut", k=4, order="random", seed=1),
+    )
+    assert res.telemetry["buffer_strategy"] == "gain"
+    assert res.assignment.shape == (parity_graph.num_vertices,)
+    # and it is genuinely a different run than cuttana on the same spec
+    base = partition(
+        parity_graph, PartitionSpec(algo="cuttana", k=4, order="random", seed=1)
+    )
+    assert base.telemetry["buffer_strategy"] == "eq6"
+    assert not np.array_equal(res.assignment, base.assignment)
+
+
+def test_completeness_strategy_through_core(parity_graph):
+    """Non-default strategy through the sequential core entry point."""
+    g = parity_graph
+    tele = {}
+    part = cuttana_partition(
+        g, 4, epsilon=0.05, balance_mode="edge", order="random", seed=0,
+        strategy="completeness", telemetry=tele,
+    )
+    assert part.shape == (g.num_vertices,)
+    assert (part >= 0).all()
+    assert tele["buffer_strategy"] == "completeness"
