@@ -1,0 +1,115 @@
+"""Churn suite: incremental updates vs full re-partition on one timestamped
+stream.
+
+Replays a seeded R-MAT churn stream (random arrival ordering - the
+adversarial case where a vertex's edges are scattered across the stream)
+through the incremental partitioner and compares against the full
+re-partition strategy on the same stream:
+
+* quality: final edge-cut of each strategy on the post-churn snapshot;
+* cost per batch: ``update_ms`` - mean wall per arrival batch for the
+  incremental path, one full re-partition wall for the baseline (what the
+  full strategy pays at *every* batch);
+* stream work: vertex placements. Incremental places each arriving vertex
+  once plus its re-stream windows; full re-partition replays every seen
+  vertex at every batch (``sum_b |V_seen(b)|``).
+
+The acceptance bar (gated by ``scripts/churn_smoke.py`` in CI): incremental
+stays within 15% of the full re-partition edge-cut at under half its
+cumulative stream work.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import fennel
+from repro.core.incremental import IncrementalPartitioner
+from repro.graph.churn import rmat_churn
+from repro.graph.metrics import edge_cut
+
+
+def full_repartition_work(stream, num_batches: int) -> int:
+    """Cumulative stream work of re-partitioning from scratch at every
+    batch: sum over batches of the vertices seen so far."""
+    seen = np.zeros(stream.num_vertices, dtype=bool)
+    total = 0
+    for batch in stream.batches(num_batches):
+        if batch.size:
+            seen[np.unique(batch)] = True
+        total += int(seen.sum())
+    return total
+
+
+def run(n: int = 25_000, k: int = 8, num_batches: int = 20, seed: int = 7):
+    rows = []
+    stream = rmat_churn(n, avg_degree=16, seed=seed, ordering="random")
+    graph = stream.final_graph()
+
+    # ---- incremental: ingest per batch, time each update
+    inc = IncrementalPartitioner(
+        stream.num_vertices, k, balance_mode="edge", seed=seed
+    )
+    batch_ms = []
+    for batch in stream.batches(num_batches):
+        t0 = time.perf_counter()
+        inc.ingest(batch)
+        batch_ms.append((time.perf_counter() - t0) * 1e3)
+    part_inc = inc.finalize()
+    cut_inc = edge_cut(graph, part_inc)
+    inc_update_ms = float(np.mean(batch_ms))
+    inc_work = inc.stream_work
+
+    # ---- full re-partition: the cost the baseline pays per arrival batch
+    t0 = time.perf_counter()
+    part_full = fennel.partition(graph, k, balance_mode="edge", seed=seed)
+    full_ms = (time.perf_counter() - t0) * 1e3
+    cut_full = edge_cut(graph, part_full)
+    full_work = full_repartition_work(stream, num_batches)
+
+    cut_ratio = cut_inc / max(cut_full, 1e-12)
+    work_ratio = inc_work / max(full_work, 1)
+    rows.append({
+        "bench": f"churn/rmat{n}/incremental",
+        "algo": "cuttana-incremental",
+        "n": stream.num_vertices,
+        "m": stream.num_edges,
+        "k": k,
+        "num_batches": num_batches,
+        "edge_cut": float(cut_inc),
+        "update_ms": inc_update_ms,
+        "stream_work": int(inc_work),
+        "restream_windows": inc.restream_windows,
+        "moved_vertices": inc.moved_vertices,
+        "cut_ratio_vs_full": float(cut_ratio),
+        "work_ratio_vs_full": float(work_ratio),
+    })
+    rows.append({
+        "bench": f"churn/rmat{n}/full-repartition",
+        "algo": "fennel",
+        "n": stream.num_vertices,
+        "m": stream.num_edges,
+        "k": k,
+        "num_batches": num_batches,
+        "edge_cut": float(cut_full),
+        "update_ms": float(full_ms),
+        "stream_work": int(full_work),
+    })
+    emit(
+        f"churn_incremental_n{n}",
+        inc_update_ms * 1e3,
+        f"cut={cut_inc:.4f},windows={inc.restream_windows},"
+        f"moved={inc.moved_vertices},work_ratio={work_ratio:.3f}",
+    )
+    emit(
+        f"churn_full_repartition_n{n}",
+        full_ms * 1e3,
+        f"cut={cut_full:.4f},cut_ratio={cut_ratio:.3f}",
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -86,6 +86,9 @@ def main() -> None:
         "outofcore": _suite("outofcore", lambda: dict(
             n=40_000 if not args.full else 125_000
         )),
+        "churn": _suite("churn", lambda: dict(
+            n=25_000 if not args.full else 100_000
+        )),
         "serving": _suite("serving", lambda: dict(
             n=8_000 if not args.full else 30_000,
             queries=2_000 if not args.full else 6_000,

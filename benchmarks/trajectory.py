@@ -7,8 +7,9 @@ compares such a report against a committed baseline (repo-root
 * quality metrics (``edge_cut``, ``comm_volume`` - the paper's two headline
   quality numbers, lambda_EC and lambda_CV) worse than
   ``baseline * (1 + tolerance)``;
-* latency metrics (``stream_seconds``, ``convert_seconds``, and the serving
-  suite's deterministic ``p99_sim_ms`` tail) worse than
+* latency metrics (``stream_seconds``, ``convert_seconds``, the serving
+  suite's deterministic ``p99_sim_ms`` tail, and the churn suite's
+  per-batch ``update_ms``) worse than
   ``baseline * (1 + latency_tolerance)`` - wall clocks are noisier than the
   deterministic seeded quality numbers, so CI may loosen just this bound;
 * throughput metrics (``qps_sim`` - higher is better) *below*
@@ -57,6 +58,7 @@ LATENCY_METRICS = (
     "convert_seconds",
     "p99_sim_ms",
     "superstep_ms",
+    "update_ms",
 )
 THROUGHPUT_METRICS = ("qps_sim",)
 FOOTPRINT_METRICS = ("bytes_on_disk", "peak_rss_mb")

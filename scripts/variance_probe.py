@@ -1,0 +1,92 @@
+"""Characterize run-to-run variance of the db (and optionally substrate)
+benchmark suites.
+
+The bench-trajectory gate currently covers the deterministic quality/
+footprint metrics and a loosened latency bound, but the db/substrate wall
+clocks are ungated because their CI variance has never been measured. This
+probe runs a suite N times in one process and reports the per-metric spread
+(min/max/mean and relative range, keyed by the trajectory row key), so the
+next PR can pick a real gating tolerance instead of a guess.
+
+Dispatched manually from CI (``workflow_dispatch`` -> variance-probe job);
+the JSON artifact is the deliverable.
+
+    PYTHONPATH=src python scripts/variance_probe.py --runs 3 \
+        --suites db --out variance_report.json
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import os
+import sys
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, _ROOT)  # benchmarks package
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+
+def _numeric_metrics(row: dict) -> dict:
+    return {
+        key: float(val)
+        for key, val in row.items()
+        if isinstance(val, (int, float)) and not isinstance(val, bool)
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--runs", type=int, default=3)
+    ap.add_argument("--suites", default="db",
+                    help="comma-separated benchmark suite modules to probe")
+    ap.add_argument("--out", default="variance_report.json")
+    args = ap.parse_args()
+
+    from benchmarks.trajectory import row_key
+    from repro.api.result import jsonify
+
+    suites = args.suites.split(",")
+    # key -> metric -> [value per run]
+    samples: dict[str, dict[str, list[float]]] = {}
+    for i in range(args.runs):
+        for suite in suites:
+            print(f"# === run {i + 1}/{args.runs} {suite} ===", flush=True)
+            mod = importlib.import_module(f"benchmarks.{suite}")
+            rows = mod.run()
+            for row in jsonify(rows):
+                if not isinstance(row, dict):
+                    continue
+                key = row_key(suite, row)
+                bucket = samples.setdefault(key, {})
+                for metric, val in _numeric_metrics(row).items():
+                    bucket.setdefault(metric, []).append(val)
+
+    spread: dict[str, dict] = {}
+    worst = 0.0
+    for key in sorted(samples):
+        spread[key] = {}
+        for metric, vals in sorted(samples[key].items()):
+            lo, hi = min(vals), max(vals)
+            mean = sum(vals) / len(vals)
+            rel = (hi - lo) / abs(mean) if mean else 0.0
+            spread[key][metric] = {
+                "min": lo, "max": hi, "mean": mean,
+                "rel_range": round(rel, 4), "values": vals,
+            }
+            worst = max(worst, rel)
+    report = {
+        "runs": args.runs,
+        "suites": suites,
+        "cores": os.cpu_count() or 1,
+        "worst_rel_range": round(worst, 4),
+        "spread": spread,
+    }
+    with open(args.out, "w") as fh:
+        json.dump(report, fh, indent=2, sort_keys=True)
+    print(f"wrote {args.out} (worst relative range {worst:.1%})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

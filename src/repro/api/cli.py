@@ -5,6 +5,8 @@
         [--with-analytics] [--with-db]
     python -m repro.api.cli serve-bench --spec spec.json --rmat 20000 \\
         --queries 5000 --concurrency 1000 [--replication-budget 0.05]
+    python -m repro.api.cli update --spec spec.json --churn stream.npz \\
+        [--prior-graph g.npz --prior-assignment part.npy]
     python -m repro.api.cli list
 
 ``partition`` loads a :class:`~repro.api.spec.PartitionSpec` from JSON, runs
@@ -17,7 +19,12 @@ optionally the analytics cost model / DB workload numbers). ``serve-bench``
 additionally stands up the partition-aware serving layer
 (:mod:`repro.serve.graph`) and drives a concurrent mixed query load through
 it, reporting throughput, p50/p95/p99 latency, and RPC/byte counts from the
-router's real message flow. ``list`` prints the declarative registry.
+router's real message flow. ``update`` replays a saved
+:class:`~repro.graph.churn.ChurnStream` through the incremental partitioner
+(:mod:`repro.core.incremental`), optionally warm-starting from a prior
+snapshot + assignment, and reports the churn telemetry (batches, re-stream
+windows, moved vertices, drift trajectory). ``list`` prints the declarative
+registry.
 """
 from __future__ import annotations
 
@@ -105,6 +112,27 @@ def _build_parser() -> argparse.ArgumentParser:
                    help="serving worker threads (0 = auto, one per "
                         "partition up to cpu_count)")
 
+    u = sub.add_parser(
+        "update",
+        help="incrementally update a prior partition with edge-arrival "
+             "batches (algo must be cuttana-incremental)",
+    )
+    u.add_argument("--spec", required=True,
+                   help="path to a cuttana-incremental PartitionSpec JSON")
+    u.add_argument("--churn", required=True, metavar="PATH",
+                   help="ChurnStream .npz (repro.graph.churn) to replay")
+    u.add_argument("--prior-graph", default=None, metavar="PATH",
+                   help=".npz CSRGraph snapshot to warm-start from "
+                        "(cold start when omitted)")
+    u.add_argument("--prior-assignment", default=None, metavar="PATH",
+                   help=".npy prior assignment (requires --prior-graph)")
+    u.add_argument("--num-batches", type=int, default=None,
+                   help="override the spec's replay batch count")
+    u.add_argument("--out", default=None,
+                   help="write the JSON report here (default: stdout)")
+    u.add_argument("--assignment-out", default=None,
+                   help="also save the updated assignment as .npy")
+
     sub.add_parser("list", help="list the partitioner registry")
     return ap
 
@@ -191,6 +219,66 @@ def _cmd_partition(args) -> int:
     return 0
 
 
+def _cmd_update(args) -> int:
+    import dataclasses
+
+    import numpy as np
+
+    from repro.api import PartitionSpec
+    from repro.core.incremental import update
+    from repro.graph.churn import ChurnStream
+    from repro.graph.csr import CSRGraph
+
+    spec = PartitionSpec.from_json(Path(args.spec).read_text())
+    if spec.algo != "cuttana-incremental":
+        raise SystemExit(
+            f"update needs a cuttana-incremental spec, got {spec.algo!r}"
+        )
+    stream = ChurnStream.load(args.churn)
+    prior = None
+    if args.prior_assignment is not None and args.prior_graph is None:
+        raise SystemExit("--prior-assignment requires --prior-graph")
+    if args.prior_graph is not None:
+        if args.prior_assignment is None:
+            raise SystemExit("--prior-graph requires --prior-assignment")
+        prior = (
+            CSRGraph.load(args.prior_graph),
+            np.load(args.prior_assignment),
+        )
+    knobs = dataclasses.asdict(spec.params)
+    if args.num_batches is not None:
+        knobs["num_batches"] = args.num_batches
+    result = update(
+        prior,
+        stream,
+        k=spec.k,
+        epsilon=spec.epsilon,
+        balance_mode=spec.balance_mode,
+        seed=spec.seed,
+        **knobs,
+    )
+    report = result.to_report()
+    report["graph"]["name"] = args.churn
+    report["churn"] = {
+        "num_edges": stream.num_edges,
+        "num_vertices": stream.num_vertices,
+        "warm_start": prior is not None,
+    }
+    if args.assignment_out:
+        path = args.assignment_out
+        if not path.endswith(".npy"):
+            path += ".npy"
+        np.save(path, result.assignment)
+        report["assignment_path"] = path
+    text = json.dumps(report, indent=2, sort_keys=True)
+    if args.out:
+        Path(args.out).write_text(text + "\n")
+        print(f"wrote {args.out}", file=sys.stderr)
+    else:
+        print(text)
+    return 0
+
+
 def _cmd_list() -> int:
     from repro.api import REGISTRY
 
@@ -247,6 +335,8 @@ def main(argv=None) -> int:
         return _cmd_list()
     if args.cmd == "serve-bench":
         return _cmd_serve_bench(args)
+    if args.cmd == "update":
+        return _cmd_update(args)
     return _cmd_partition(args)
 
 

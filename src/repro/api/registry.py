@@ -36,6 +36,7 @@ __all__ = [
     "CuttanaBatchedAlgoParams",
     "HeiStreamAlgoParams",
     "RestreamAlgoParams",
+    "IncrementalAlgoParams",
     "HDRFAlgoParams",
     "ClusterAlgoParams",
 ]
@@ -188,6 +189,23 @@ class RestreamAlgoParams:
 
 
 @dataclasses.dataclass(frozen=True)
+class IncrementalAlgoParams:
+    """Incremental (churn) mode knobs. ``num_batches`` splits the replayed
+    arrival stream; a batch whose edge-cut drifts past ``drift_threshold``
+    (relative to the last re-stream point) triggers a windowed local
+    re-stream over at most ``window_frac`` of the seen vertices.
+    ``num_shards=0``/``"auto"`` auto-tunes; ``max_workers`` (0 = auto) never
+    changes assignments."""
+
+    num_batches: int = 16
+    drift_threshold: float = 0.10
+    window_frac: float = 0.25
+    num_shards: int = 1
+    max_workers: int = 0
+    chunk: int = 512
+
+
+@dataclasses.dataclass(frozen=True)
 class HDRFAlgoParams:
     lam: float = 4.0
 
@@ -326,6 +344,15 @@ def _register_all() -> None:
             "edge-cut", "restream", "engine", both, _STREAM_COMMON,
             RestreamAlgoParams, telemetry=True,
             description="restreaming with CUTTANA as the core partitioner",
+        ),
+        PartitionerInfo(
+            "cuttana-incremental",
+            "repro.core.incremental:partition_incremental",
+            "edge-cut", "restream", "engine", both, _STREAM_COMMON,
+            IncrementalAlgoParams, telemetry=True,
+            description="incremental partitioning under churn: live-load "
+                        "streaming placement + drift-triggered windowed "
+                        "re-streams",
         ),
         PartitionerInfo(
             "fennel", "repro.core.fennel:partition", "edge-cut", "immediate",

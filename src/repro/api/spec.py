@@ -262,6 +262,20 @@ def _check_param_types(info: PartitionerInfo, block: Any):
                     f"{info.name!r} param 'strategy' must be one of "
                     f"{allowed}, got {value!r}"
                 )
+        if field.name == "num_batches" and value < 1:
+            raise ValueError(
+                f"{info.name!r} param 'num_batches' must be >= 1, got {value!r}"
+            )
+        if field.name == "drift_threshold" and value < 0:
+            raise ValueError(
+                f"{info.name!r} param 'drift_threshold' must be >= 0, "
+                f"got {value!r}"
+            )
+        if field.name == "window_frac" and not (0 < value <= 1):
+            raise ValueError(
+                f"{info.name!r} param 'window_frac' must be in (0, 1], "
+                f"got {value!r}"
+            )
         if field.name == "hub_degree" and value < 2:
             raise ValueError(
                 f"{info.name!r} param 'hub_degree' must be >= 2, got {value!r}"

@@ -33,6 +33,11 @@ from repro.core.engine import (
     ShardedImmediatePolicy,
     StreamEngine,
 )
+from repro.core.incremental import (
+    IncrementalPartitioner,
+    partition_incremental,
+    update,
+)
 from repro.core.parallel import fennel_parallel, partition_parallel
 from repro.core.hdrf import EdgePartition, partition_ginger, partition_hdrf
 from repro.core.random_hash import partition_chunked, partition_hash, partition_random
@@ -85,4 +90,7 @@ __all__ = [
     "ShardedBufferedPolicy",
     "partition_parallel",
     "fennel_parallel",
+    "IncrementalPartitioner",
+    "partition_incremental",
+    "update",
 ]

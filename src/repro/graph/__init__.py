@@ -1,4 +1,5 @@
 """Graph substrate: CSR structures, generators, streaming readers, metrics."""
+from repro.graph.churn import ChurnStream, churn_from_graph, rmat_churn
 from repro.graph.csr import CSRGraph
 from repro.graph.external import (
     ExternalCSRGraph,
@@ -25,6 +26,9 @@ from repro.graph.metrics import (
 
 __all__ = [
     "CSRGraph",
+    "ChurnStream",
+    "churn_from_graph",
+    "rmat_churn",
     "ExternalCSRGraph",
     "convert_csr",
     "convert_edge_list",

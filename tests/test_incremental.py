@@ -1,0 +1,281 @@
+"""Incremental repartitioning under churn (repro.core.incremental +
+repro.graph.churn): parity pins, determinism, drift bookkeeping."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.api import PartitionSpec, partition
+from repro.core import fennel
+from repro.core.incremental import (
+    IncrementalPartitioner,
+    partition_incremental,
+    update,
+)
+from repro.graph import edge_cut
+from repro.graph.churn import ChurnStream, churn_from_graph, rmat_churn
+from repro.graph.csr import CSRGraph
+from repro.graph.generators import rmat_graph
+
+K = 8
+
+
+@pytest.fixture(scope="module")
+def graph():
+    """R-MAT plus a path so no vertex is isolated (the parity pin needs
+    every vertex to appear in the edge stream)."""
+    g0 = rmat_graph(3000, avg_degree=8, seed=1)
+    path = np.stack(
+        [np.arange(g0.num_vertices - 1), np.arange(1, g0.num_vertices)], axis=1
+    )
+    g = CSRGraph.from_edges(
+        np.concatenate([g0.edges_array(), path]), num_vertices=g0.num_vertices
+    )
+    assert (g.degrees > 0).all()
+    return g
+
+
+@pytest.fixture(scope="module")
+def stream(graph):
+    return churn_from_graph(graph)
+
+
+# --------------------------------------------------------------- ChurnStream
+def test_churn_stream_canonicalizes():
+    edges = np.array([[1, 2], [3, 3], [2, 1], [0, 4], [4, 0], [2, 5]])
+    st = ChurnStream.from_edges(edges)
+    # self loop dropped, duplicates keep first arrival, canonical (lo, hi)
+    assert st.edges.tolist() == [[1, 2], [0, 4], [2, 5]]
+    assert np.all(np.diff(st.timestamps) >= 0)
+    assert st.num_vertices == 6
+
+
+def test_churn_stream_timestamp_sort_and_windows():
+    edges = np.array([[0, 1], [2, 3], [4, 5]])
+    st = ChurnStream.from_edges(edges, timestamps=[5.0, 1.0, 3.0])
+    assert st.edges.tolist() == [[2, 3], [4, 5], [0, 1]]
+    # half-open [t0 + i*span, t0 + (i+1)*span) windows: 1 -> w0, 3 -> w1, 5 -> w2
+    wins = st.windows(2.0)
+    assert [w.tolist() for w in wins] == [[[2, 3]], [[4, 5]], [[0, 1]]]
+
+
+def test_churn_stream_batches_and_final_graph(graph, stream):
+    batches = stream.batches(7)
+    assert len(batches) == 7
+    assert sum(b.shape[0] for b in batches) == stream.num_edges
+    final = stream.final_graph()
+    assert final.num_edges == graph.num_edges
+    assert np.array_equal(final.indptr, graph.indptr)
+    assert np.array_equal(final.indices, graph.indices)
+
+
+def test_churn_stream_save_load_round_trip(tmp_path):
+    st = rmat_churn(500, avg_degree=6, seed=3)
+    path = str(tmp_path / "stream.npz")
+    st.save(path)
+    back = ChurnStream.load(path)
+    assert back.num_vertices == st.num_vertices
+    assert np.array_equal(back.edges, st.edges)
+    assert np.array_equal(back.timestamps, st.timestamps)
+
+
+def test_rmat_churn_orderings_same_edge_set():
+    growth = rmat_churn(1000, avg_degree=8, seed=2, ordering="growth")
+    rand = rmat_churn(1000, avg_degree=8, seed=2, ordering="random")
+    key = lambda st: set(map(tuple, st.edges.tolist()))
+    assert key(growth) == key(rand)
+    # growth ordering: the later endpoint is nondecreasing over the stream
+    later = np.maximum(growth.edges[:, 0], growth.edges[:, 1])
+    assert np.all(np.diff(later) >= 0)
+    with pytest.raises(ValueError, match="ordering"):
+        rmat_churn(100, seed=0, ordering="sorted")
+
+
+# ------------------------------------------------------------------- parity
+@pytest.mark.parametrize("order", ["natural", "random"])
+@pytest.mark.parametrize("mode", ["vertex", "edge"])
+def test_single_batch_matches_one_shot_fennel(graph, order, mode):
+    """Replaying the whole stream as ONE batch is exactly the one-shot
+    streaming partitioner: same vertex order, same neighbourhoods, same
+    live loads - bit-identical assignments."""
+    inc = partition_incremental(
+        graph, K, balance_mode=mode, order=order, seed=3, num_batches=1
+    )
+    base = fennel.partition(graph, K, balance_mode=mode, order=order, seed=3)
+    assert np.array_equal(inc, base)
+
+
+def test_spec_run_matches_bare_callable(graph):
+    spec = PartitionSpec(
+        algo="cuttana-incremental", k=K, params={"num_batches": 4}
+    )
+    result = partition(graph, spec)
+    bare = partition_incremental(graph, K, num_batches=4)
+    assert np.array_equal(result.assignment, bare)
+    assert result.telemetry["batches"] == 4
+    assert "stream_seconds" in result.timings
+
+
+# ------------------------------------------------------------- degenerate
+def test_empty_batches_are_noops(graph, stream):
+    inc = IncrementalPartitioner(graph.num_vertices, K)
+    out = inc.ingest(np.empty((0, 2), dtype=np.int64))
+    assert out == {"new_vertices": 0, "moved": 0, "edge_cut": 0.0}
+    # interleaving empty batches never changes the result
+    ref = IncrementalPartitioner(graph.num_vertices, K)
+    for b in stream.batches(4):
+        ref.ingest(b)
+    mixed = IncrementalPartitioner(graph.num_vertices, K)
+    for b in stream.batches(4):
+        mixed.ingest(np.empty((0, 2), dtype=np.int64))
+        mixed.ingest(b)
+    assert np.array_equal(ref.finalize(), mixed.finalize())
+
+
+def test_duplicate_edges_across_batches_dropped(graph, stream):
+    inc = IncrementalPartitioner(graph.num_vertices, K)
+    batches = stream.batches(3)
+    for b in batches:
+        inc.ingest(b)
+    m_before, cut_before = inc.m, inc.cut
+    out = inc.ingest(batches[0])  # replay an old batch: all duplicates
+    assert out["new_vertices"] == 0
+    assert (inc.m, inc.cut) == (m_before, cut_before)
+
+
+def test_never_seen_vertices_assigned_at_finalize():
+    # vertex 5 of 6 never appears in any edge
+    inc = IncrementalPartitioner(6, 3)
+    inc.ingest(np.array([[0, 1], [1, 2], [2, 3], [3, 4]]))
+    part = inc.finalize()
+    assert part.shape == (6,)
+    assert (part >= 0).all() and (part < 3).all()
+    assert inc.state.v_counts.sum() == 6
+
+
+# ---------------------------------------------------------------- drift
+def test_drift_never_fires_means_zero_moves(graph, stream):
+    inc = IncrementalPartitioner(
+        graph.num_vertices, K, drift_threshold=1e9
+    )
+    for b in stream.batches(12):
+        inc.ingest(b)
+    inc.finalize()
+    assert inc.restream_windows == 0
+    assert inc.moved_vertices == 0
+    assert inc.drift_before == [] and inc.drift_after == []
+    assert inc.stream_work == graph.num_vertices
+
+
+def test_drift_triggers_windowed_restream_and_improves_cut():
+    st = rmat_churn(4000, avg_degree=12, seed=9, ordering="random")
+    g = st.final_graph()
+    inc = IncrementalPartitioner(
+        st.num_vertices, K, drift_threshold=0.05, seed=9
+    )
+    for b in st.batches(10):
+        inc.ingest(b)
+    seen = inc.seen  # vertices placed by streaming (rest are isolated)
+    part = inc.finalize()
+    isolated = st.num_vertices - seen
+    assert inc.restream_windows > 0
+    assert inc.moved_vertices > 0
+    assert len(inc.drift_before) == len(inc.drift_after) == inc.restream_windows
+    # every window strictly improved (or held) the tracked cut
+    for before, after in zip(inc.drift_before, inc.drift_after):
+        assert after <= before + 1e-12
+    # telemetry maps the window bookkeeping onto BufferStats
+    tel = inc.telemetry()
+    assert (
+        tel["buffer_drained"]
+        == inc.stream_work - inc.new_vertices - isolated
+    )
+    assert tel["buffer_evictions"] == inc.moved_vertices
+    assert tel["degree_bypass"] == inc.new_vertices
+    assert tel["buffer_strategy"] == "incremental-window"
+    # internal cut counter is exact
+    assert inc.cut / max(inc.m, 1) == pytest.approx(edge_cut(g, part))
+
+
+def test_load_invariants_after_churn(graph, stream):
+    inc = IncrementalPartitioner(graph.num_vertices, K, drift_threshold=0.02)
+    for b in stream.batches(9):
+        inc.ingest(b)
+    part = inc.finalize()
+    deg = graph.degrees.astype(np.float64)
+    assert np.allclose(
+        inc.state.e_counts, np.bincount(part, weights=deg, minlength=K)
+    )
+    assert np.allclose(inc.state.v_counts, np.bincount(part, minlength=K))
+
+
+# ----------------------------------------------------------- determinism
+@pytest.mark.parametrize("workers", [1, 2, 8])
+def test_deterministic_across_max_workers(graph, workers):
+    ref = partition_incremental(
+        graph, K, num_batches=6, num_shards=4, max_workers=1,
+        drift_threshold=0.02,
+    )
+    got = partition_incremental(
+        graph, K, num_batches=6, num_shards=4, max_workers=workers,
+        drift_threshold=0.02,
+    )
+    assert np.array_equal(ref, got)
+
+
+def test_repeat_runs_identical(graph):
+    a = partition_incremental(graph, K, num_batches=5, seed=11)
+    b = partition_incremental(graph, K, num_batches=5, seed=11)
+    assert np.array_equal(a, b)
+
+
+# ------------------------------------------------------------------ update
+def test_update_warm_start_accumulates(tmp_path):
+    st = rmat_churn(2000, avg_degree=8, seed=5)
+    half = st.num_edges // 2
+    first = ChurnStream.from_edges(
+        st.edges[:half], num_vertices=st.num_vertices
+    )
+    rest = ChurnStream.from_edges(
+        st.edges[half:], num_vertices=st.num_vertices
+    )
+    cold = update(None, first, k=4)
+    assert cold.telemetry["warm_start"] is False
+    warm = update(cold, rest)
+    assert warm.telemetry["warm_start"] is True
+    assert warm.graph.num_edges == st.num_edges
+    assert warm.assignment.shape == (st.num_vertices,)
+    assert warm.spec.algo == "cuttana-incremental"
+    lam = edge_cut(warm.graph, warm.assignment)
+    assert warm.telemetry["edge_cut_live"] == pytest.approx(lam)
+    # warm start streams only the NEW arrivals, not the prior graph
+    assert warm.telemetry["new_vertices"] < st.num_vertices
+
+
+def test_update_requires_k_on_cold_start():
+    with pytest.raises(ValueError, match="needs k"):
+        update(None, [np.array([[0, 1]])])
+
+
+# ------------------------------------------------------------- spec knobs
+def test_spec_validates_incremental_knobs():
+    with pytest.raises(ValueError, match="num_batches"):
+        PartitionSpec(
+            algo="cuttana-incremental", k=2, params={"num_batches": 0}
+        )
+    with pytest.raises(ValueError, match="drift_threshold"):
+        PartitionSpec(
+            algo="cuttana-incremental", k=2, params={"drift_threshold": -0.1}
+        )
+    with pytest.raises(ValueError, match="window_frac"):
+        PartitionSpec(
+            algo="cuttana-incremental", k=2, params={"window_frac": 0.0}
+        )
+    with pytest.raises(ValueError, match="window_frac"):
+        PartitionSpec(
+            algo="cuttana-incremental", k=2, params={"window_frac": 1.5}
+        )
+    spec = PartitionSpec(
+        algo="cuttana-incremental", k=2, params={"num_shards": "auto"}
+    )
+    assert spec.params.num_shards == 0
